@@ -1,0 +1,36 @@
+"""Paper Table 1 / Table 4 (Fig 7): contribution of P / S / A combinations."""
+from __future__ import annotations
+
+from benchmarks.common import (bench_prompts, csv_row, host_lm, make_retriever,
+                               run_requests, speedup_pair, variant_rcfg)
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.serving.engine import ServeEngine
+
+VARIANTS = ["", "p", "s", "a", "ps", "sa", "pa", "psa"]
+
+
+def run(n_requests: int = 3, retrievers=("edr", "adr", "sr"),
+        variants=VARIANTS) -> list:
+    rows = []
+    cfg, model, params = host_lm()
+    for rname in retrievers:
+        docs, enc, retr = make_retriever(rname)
+        prompts = bench_prompts(docs, n_requests, seed=5)
+        eng = ServeEngine(model, params, cache_window=512)
+        b = run_requests(RaLMSeq(eng, retr, variant_rcfg(""), enc), prompts)
+        rows.append(csv_row(f"table1/{rname}/B", 1e6 * b["analytic"] / b["n"],
+                            "wall=1.00x modeled=1.00x"))
+        print(rows[-1])
+        for v in variants:
+            a = run_requests(RaLMSpec(eng, retr, variant_rcfg(v), enc), prompts)
+            rows.append(csv_row(
+                f"table1/{rname}/{v.upper() or 'spec'}",
+                1e6 * a["analytic"] / a["n"],
+                f"{speedup_pair(b, a)} "
+                f"mism={a['mismatches']} preserved={a['tokens'] == b['tokens']}"))
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Figure 6 / §A.1: per-query latency vs batch size for the three retrievers —
+the structural fact batched verification exploits."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row, dense_stack, make_retriever, sparse_stack
+
+
+def _time_batches(retr, make_queries_fn, sizes=(1, 2, 4, 8, 16), reps: int = 3):
+    out = {}
+    qs = make_queries_fn(max(sizes))
+    retr.retrieve(qs[:1] if not isinstance(qs, list) else qs[:1], 4)  # warm
+    for b in sizes:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            retr.retrieve(qs[:b], 4)
+        out[b] = (time.perf_counter() - t0) / reps / b
+    return out
+
+
+def run() -> list:
+    rows = []
+    for rname in ("edr", "adr", "sr"):
+        docs, enc, retr = make_retriever(rname)
+        if rname == "sr":
+            make_q = lambda n: [docs[i][:8] for i in range(n)]
+        else:
+            make_q = lambda n: np.stack([enc.encode(docs[i][:10])
+                                         for i in range(n)])
+        per_q = _time_batches(retr, make_q)
+        ratio = per_q[1] / max(per_q[16], 1e-12)
+        for b, t in per_q.items():
+            rows.append(csv_row(f"fig6/{rname}/batch{b}", 1e6 * t,
+                                f"perq_speedup_vs_b1={per_q[1] / max(t, 1e-12):.2f}x"))
+            print(rows[-1])
+        print(f"  -> {rname}: batch-16 is {ratio:.1f}x cheaper per query than batch-1")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Figure 5: KNN-LM serving speed-ups (per-token retrieval; spatial-prefetch
+cache + token-match verification), k in {1, 8, 64}, fixed stride vs OS^3."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import VOCAB, csv_row, knn_stack, run_requests, speedup_pair
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.knnlm import KNNLMSeq, KNNLMSpec
+from repro.models.model import build_model
+from repro.retrieval.retrievers import ExactDenseRetriever, IVFRetriever
+from repro.serving.engine import ServeEngine
+
+
+def run(n_requests: int = 3, ks=(1, 8, 64)) -> list:
+    rows = []
+    cfg = reduced(get_config("knnlm-247m"), layers=2, d_model=128, vocab=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream, enc, ds = knn_stack()
+    prompts = [stream[i * 97:i * 97 + 48].tolist() for i in range(n_requests)]
+    for rname, retr in [("edr", ExactDenseRetriever(ds)),
+                        ("adr", IVFRetriever(ds, n_clusters=128, nprobe=4,
+                                             iters=3))]:
+        for k in ks:
+            base_cfg = RaLMConfig(knnlm=True, knn_k=k, max_new_tokens=48,
+                                  speculation_stride=3)
+            eng = ServeEngine(model, params, cache_window=256)
+            b = run_requests(KNNLMSeq(eng, retr, base_cfg, enc), prompts)
+            for label, rc in [("s3", base_cfg),
+                              ("OS3", dataclasses.replace(base_cfg, use_os3=True))]:
+                a = run_requests(KNNLMSpec(eng, retr, rc, enc), prompts)
+                rows.append(csv_row(
+                    f"fig5/{rname}/k{k}/{label}", 1e6 * a["analytic"] / a["n"],
+                    f"{speedup_pair(b, a)} "
+                    f"preserved={a['tokens'] == b['tokens']} "
+                    f"mism={a['mismatches']}"))
+                print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Table 2: prefetch size 20 vs 256 (larger prefetch can hurt — higher
+retrieval cost per verification outweighs the hit-rate gain for cheap retrievers)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (bench_prompts, csv_row, host_lm, make_retriever,
+                               run_requests, speedup_pair, variant_rcfg)
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.serving.engine import ServeEngine
+
+
+def run(n_requests: int = 3, retrievers=("edr", "adr", "sr")) -> list:
+    rows = []
+    cfg, model, params = host_lm()
+    for rname in retrievers:
+        docs, enc, retr = make_retriever(rname)
+        prompts = bench_prompts(docs, n_requests, seed=7)
+        eng = ServeEngine(model, params, cache_window=512)
+        b = run_requests(RaLMSeq(eng, retr, variant_rcfg(""), enc), prompts)
+        for size in (20, 256):
+            rcfg = dataclasses.replace(variant_rcfg("p"), prefetch_top_k=size)
+            a = run_requests(RaLMSpec(eng, retr, rcfg, enc), prompts)
+            rows.append(csv_row(
+                f"table2/{rname}/P({size})", 1e6 * a["analytic"] / a["n"],
+                f"{speedup_pair(b, a)} mism={a['mismatches']}"))
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Figure 4 / Tables 6-8: RaLMSeq vs RaLMSpec vs RaLMSpec+PSA per retriever,
+with the G (generation) / R (retrieval) latency decomposition."""
+from __future__ import annotations
+
+from benchmarks.common import (bench_prompts, csv_row, host_lm, make_retriever,
+                               run_requests, speedup_pair, variant_rcfg)
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.serving.engine import ServeEngine
+
+
+def run(n_requests: int = 4, retrievers=("edr", "adr", "sr")) -> list:
+    rows = []
+    cfg, model, params = host_lm()
+    for rname in retrievers:
+        docs, enc, retr = make_retriever(rname)
+        prompts = bench_prompts(docs, n_requests)
+        eng = ServeEngine(model, params, cache_window=512)
+        base = None
+        for mname, server in [
+            ("RaLMSeq", RaLMSeq(eng, retr, variant_rcfg(""), enc)),
+            ("RaLMSpec", RaLMSpec(eng, retr, variant_rcfg(""), enc)),
+            ("RaLMSpec+PSA", RaLMSpec(eng, retr, variant_rcfg("psa"), enc)),
+            ("RaLMSpec+PSA+sess", RaLMSpec(eng, retr, variant_rcfg("psa"), enc,
+                                           persistent_cache=True)),
+        ]:
+            a = run_requests(server, prompts)
+            if base is None:
+                base = a
+            rows.append(csv_row(
+                f"fig4/{rname}/{mname}", 1e6 * a["analytic"] / a["n"],
+                f"{speedup_pair(base, a)} G={a['gen']:.2f}s R={a['retr']:.2f}s "
+                f"preserved={a['tokens'] == base['tokens']}"))
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Table 5: fixed speculation strides s=2,4,8 vs OS^3 — expensive retrievers
+prefer big strides, cheap ones small strides, OS3 adapts."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import (bench_prompts, csv_row, host_lm, make_retriever,
+                               run_requests, speedup_pair, variant_rcfg)
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.serving.engine import ServeEngine
+
+
+def run(n_requests: int = 3, retrievers=("edr", "adr", "sr")) -> list:
+    rows = []
+    cfg, model, params = host_lm()
+    for rname in retrievers:
+        docs, enc, retr = make_retriever(rname)
+        prompts = bench_prompts(docs, n_requests, seed=11)
+        eng = ServeEngine(model, params, cache_window=512)
+        b = run_requests(RaLMSeq(eng, retr, variant_rcfg(""), enc), prompts)
+        for label, rcfg in (
+            [(f"S={s}", dataclasses.replace(variant_rcfg(""),
+                                            speculation_stride=s))
+             for s in (2, 4, 8)] + [("OS3", variant_rcfg("s"))]
+        ):
+            a = run_requests(RaLMSpec(eng, retr, rcfg, enc), prompts)
+            rows.append(csv_row(
+                f"table5/{rname}/{label}", 1e6 * a["analytic"] / a["n"],
+                f"{speedup_pair(b, a)} mism={a['mismatches']}"))
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""§Perf hillclimbing driver: re-lower + re-analyse a single (arch x shape) pair
+under explicit optimization overrides, printing the three roofline terms so each
+hypothesis -> change -> measure cycle is one invocation.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb kimi-k2-1t-a32b decode_32k \
+        kv_shard=head_dim
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run_one(arch: str, shape: str, overrides: dict, label: str = "") -> dict:
+    from benchmarks.roofline import analyze
+    from repro.launch.dryrun import dryrun_pair
+    rec = dryrun_pair(arch, shape, verbose=False, **overrides)
+    if not rec["ok"]:
+        print(f"[FAIL] {label or overrides}: {rec['error']}")
+        return rec
+    row = analyze([rec])[0]
+    row["overrides"] = overrides
+    row["label"] = label
+    print(f"[{label or 'baseline':28s}] comp={row['t_compute_s']:.3e}s "
+          f"mem={row['t_memory_s']:.3e}s coll={row['t_collective_s']:.3e}s "
+          f"dominant={row['dominant']} arg={row['arg_gb_per_chip']:.2f}GB "
+          f"temp={row['temp_gb_per_chip']:.2f}GB "
+          f"coll_bytes={row['coll_bytes_per_chip']:.3g}")
+    return row
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    overrides = {}
+    for kv in sys.argv[3:]:
+        k, v = kv.split("=")
+        overrides[k] = int(v) if v.isdigit() else (v == "True" if v in
+                                                   ("True", "False") else v)
+    run_one(arch, shape, overrides, label=",".join(sys.argv[3:]) or "baseline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (and progress to stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 requests per config instead of the full counts")
+    ap.add_argument("--only", default=None,
+                    help="serving|ablation|prefetch|stride|knnlm|batch|roofline")
+    args = ap.parse_args()
+    n = 2 if args.quick else 4
+    n_small = 2 if args.quick else 3
+
+    from benchmarks import (bench_ablation, bench_batch_retrieval, bench_knnlm,
+                            bench_prefetch, bench_serving, bench_stride,
+                            roofline)
+
+    suites = {
+        "batch": lambda: bench_batch_retrieval.run(),
+        "serving": lambda: bench_serving.run(n_requests=n),
+        "ablation": lambda: bench_ablation.run(n_requests=n_small),
+        "prefetch": lambda: bench_prefetch.run(n_requests=n_small),
+        "stride": lambda: bench_stride.run(n_requests=n_small),
+        "knnlm": lambda: bench_knnlm.run(n_requests=n_small),
+        "roofline": lambda: roofline.run(),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"# --- {name} ---", file=sys.stderr)
+        try:
+            all_rows.extend(fn() or [])
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+            traceback.print_exc()
+            continue
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""End-to-end training driver example: train the paper's KNN-LM base model class
+(~100M-scale reduced here for CPU; pass --full on real hardware) for a few hundred
+steps and checkpoint it.
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="full 247M config (use on real hardware)")
+    args = ap.parse_args()
+    argv = ["--arch", "knnlm-247m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_ckpt",
+            "--ckpt-every", str(max(args.steps // 2, 1))]
+    if not args.full:
+        argv.append("--reduced")
+    sys.argv = ["train"] + argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Configuration system for repro.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`. The config is a
+plain frozen dataclass so it can be hashed into jit static args and printed into
+EXPERIMENTS.md verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts sub-config (None on dense archs)."""
+
+    num_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden dim
+    num_shared_experts: int = 0    # always-on experts (qwen2-moe style)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    # token chunk size for dispatch (bounds the (E, C, d) gather buffer)
+    dispatch_chunk: int = 4096
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / recurrent sub-config (mamba + xlstm families)."""
+
+    kind: str = "mamba"            # "mamba" | "mlstm" | "slstm"
+    d_state: int = 16              # mamba SSM state dim
+    d_conv: int = 4                # mamba local conv width
+    expand: int = 2                # mamba inner expansion
+    chunk: int = 256               # chunkwise-parallel scan chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture, exactly as assigned from the public pool."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # attention options
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 -> full attention; >0 used for long_500k
+    # norm / misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (jamba): per-layer block kinds, e.g. ("mamba",)*3+("attn",)+...
+    block_pattern: Tuple[str, ...] = ()
+    # layers at which MoE replaces the dense FFN ("every_2", "all", "none")
+    moe_layer_rule: str = "all"
+    # audio (whisper): encoder spec — decoder dims come from the main fields
+    encoder_layers: int = 0
+    encoder_frames: int = 0        # stub frontend: #frames of precomputed embeddings
+    # vlm (paligemma): number of image patch embeddings prepended as prefix
+    vision_patches: int = 0
+    source: str = ""               # citation bracket from the assignment
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Sequence-mixer kind per layer."""
+        if self.block_pattern:
+            reps = -(-self.num_layers // len(self.block_pattern))
+            return (self.block_pattern * reps)[: self.num_layers]
+        if self.family == "ssm":
+            assert self.ssm is not None
+            if self.ssm.kind == "xlstm":
+                # xLSTM paper interleaves sLSTM blocks sparsely among mLSTM blocks
+                # (1:7 in the 350M configuration table).
+                return tuple(
+                    "slstm" if (i % 8 == 7) else "mlstm" for i in range(self.num_layers)
+                )
+            return (self.ssm.kind,) * self.num_layers
+        return ("attn",) * self.num_layers
+
+    def layer_has_moe(self, layer_idx: int) -> bool:
+        if self.moe is None:
+            return False
+        if self.moe_layer_rule == "all":
+            return True
+        if self.moe_layer_rule == "every_2":
+            return layer_idx % 2 == 1
+        if self.moe_layer_rule == "dense_first":
+            # kimi-k2 style: first layer dense, rest MoE
+            return layer_idx >= 1
+        return False
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks)."""
+        d, hd = self.d_model, self.head_dim
+        n_attn_per_layer = d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d
+        ffn_dense = 3 * d * self.d_ff  # SwiGLU gate/up/down
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        kinds = self.layer_kinds()
+        for i, kind in enumerate(kinds):
+            if kind == "attn":
+                total += n_attn_per_layer
+            elif kind == "mamba":
+                assert self.ssm is not None
+                d_in = self.ssm.expand * d
+                total += d * 2 * d_in + d_in * self.ssm.d_conv
+                total += d_in * (self.ssm.d_state * 2 + 1) + d_in * d
+            elif kind in ("mlstm", "slstm"):
+                d_in = 2 * d
+                total += d * d_in * 2 + 3 * d_in * hd + d_in * d  # rough proj count
+            if self.layer_has_moe(i):
+                m = self.moe
+                total += (m.num_experts + m.num_shared_experts) * 3 * d * m.d_expert
+                total += d * m.num_experts  # router
+            elif self.d_ff > 0 and kind in ("attn", "mamba"):
+                total += ffn_dense
+            total += 2 * d  # norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k + shared experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        n_moe_layers = sum(self.layer_has_moe(i) for i in range(self.num_layers))
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * 3 * self.d_model * m.d_expert
+        return full - inactive
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """An assigned (seq_len, global_batch, step-kind) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+@dataclass(frozen=True)
+class RaLMConfig:
+    """Serving-loop configuration for the paper's technique (§3–§4)."""
+
+    generation_stride: int = 4        # k: tokens generated per retrieval (Ram et al.)
+    speculation_stride: int = 3       # s: spec steps per verification (fixed mode)
+    use_os3: bool = False             # optimal speculation stride scheduler
+    async_verification: bool = False
+    prefetch_top_k: int = 1           # 1 = top-1 cache update; 20/256 = prefetching
+    os3_window: int = 5               # w for gamma estimation
+    gamma_max: float = 0.6
+    max_stride: int = 16
+    cache_capacity: int = 4096
+    # KNN-LM mode (§5.3)
+    knnlm: bool = False
+    knn_k: int = 8                    # neighbours interpolated
+    knn_prefetch_next_n: int = 10     # spatial-locality cache update
+    knn_lambda: float = 0.25          # interpolation weight
+    max_new_tokens: int = 128
+    max_prompt_len: int = 512
+    max_doc_len: int = 256

@@ -1,0 +1,143 @@
+"""The per-request local retrieval cache (paper §3, Figure 2).
+
+Not an exact-match cache: retrieval from the cache uses the *same scoring metric* as
+the knowledge-base retriever, over the (much smaller) set of cached entries. This
+gives the paper's rank-preservation property: if the KB top-1 document for a query is
+present in the cache, cache retrieval returns exactly that document
+(proved as a hypothesis property test in tests/test_cache_properties.py).
+
+DenseRetrievalCache  — keys are embeddings, score = inner product (EDR/ADR/KNN-LM).
+SparseRetrievalCache — keys are per-doc term arrays; score = BM25 with the *global*
+                       corpus statistics (idf, avgdl) captured at construction, so the
+                       cache score of a doc equals its KB score exactly.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.retrieval.kb import SparseKB
+
+
+class DenseRetrievalCache:
+    def __init__(self, d: int, capacity: int = 4096):
+        self.capacity = capacity
+        self.d = d
+        self._keys = np.zeros((capacity, d), np.float32)
+        self._ids = np.full((capacity,), -1, np.int64)
+        self._values = np.full((capacity,), -1, np.int64)   # optional payload
+        self._order: OrderedDict = OrderedDict()            # id -> slot (LRU)
+        self._free = list(range(capacity - 1, -1, -1))
+        self.size = 0
+
+    def __contains__(self, doc_id) -> bool:
+        return int(doc_id) in self._order
+
+    def insert(self, ids, keys, values=None) -> None:
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        keys = np.atleast_2d(np.asarray(keys, np.float32))
+        vals = (np.atleast_1d(np.asarray(values, np.int64))
+                if values is not None else np.full(len(ids), -1, np.int64))
+        for i, did in enumerate(ids):
+            did = int(did)
+            if did in self._order:                          # refresh LRU
+                self._order.move_to_end(did)
+                continue
+            if not self._free:                              # evict LRU
+                old, slot = self._order.popitem(last=False)
+                self._free.append(slot)
+                self.size -= 1
+            slot = self._free.pop()
+            self._keys[slot] = keys[i]
+            self._ids[slot] = did
+            self._values[slot] = vals[i]
+            self._order[did] = slot
+            self.size += 1
+
+    def retrieve(self, query: np.ndarray, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (ids (k,), scores (k,)); ids are -1 if the cache holds < k entries."""
+        if self.size == 0:
+            return np.full((k,), -1, np.int64), np.full((k,), -np.inf, np.float32)
+        slots = np.fromiter(self._order.values(), np.int64, len(self._order))
+        s = self._keys[slots] @ np.asarray(query, np.float32)
+        kk = min(k, len(slots))
+        top = np.argpartition(-s, kth=kk - 1)[:kk] if kk < len(slots) else np.argsort(-s)[:kk]
+        top = top[np.argsort(-s[top], kind="stable")]
+        ids = self._ids[slots[top]]
+        sc = s[top]
+        for did in ids:                                     # LRU touch
+            self._order.move_to_end(int(did))
+        if kk < k:
+            ids = np.pad(ids, (0, k - kk), constant_values=-1)
+            sc = np.pad(sc, (0, k - kk), constant_values=-np.inf)
+        return ids, sc
+
+    def values_of(self, ids) -> np.ndarray:
+        out = []
+        for did in np.atleast_1d(ids):
+            slot = self._order.get(int(did), None)
+            out.append(self._values[slot] if slot is not None else -1)
+        return np.asarray(out, np.int64)
+
+
+class SparseRetrievalCache:
+    """BM25-scored cache. Stores per-doc term arrays; corpus stats come from the KB
+    (global, fixed) so local scores == KB scores for any cached doc."""
+
+    def __init__(self, kb: SparseKB, capacity: int = 4096):
+        self.kb = kb
+        self.capacity = capacity
+        L = kb.terms.shape[1]
+        self._terms = np.full((capacity, L), -1, np.int32)
+        self._dl = np.zeros((capacity,), np.float32)
+        self._ids = np.full((capacity,), -1, np.int64)
+        self._order: OrderedDict = OrderedDict()
+        self._free = list(range(capacity - 1, -1, -1))
+        self.size = 0
+
+    def __contains__(self, doc_id) -> bool:
+        return int(doc_id) in self._order
+
+    def insert(self, ids, keys=None, values=None) -> None:
+        for did in np.atleast_1d(np.asarray(ids, np.int64)):
+            did = int(did)
+            if did in self._order:
+                self._order.move_to_end(did)
+                continue
+            if not self._free:
+                _, slot = self._order.popitem(last=False)
+                self._free.append(slot)
+                self.size -= 1
+            slot = self._free.pop()
+            self._terms[slot] = self.kb.terms[did]
+            self._dl[slot] = self.kb.doc_len[did]
+            self._ids[slot] = did
+            self._order[did] = slot
+            self.size += 1
+
+    def retrieve(self, query_terms, k: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        if self.size == 0:
+            return np.full((k,), -1, np.int64), np.full((k,), -np.inf, np.float32)
+        slots = np.fromiter(self._order.values(), np.int64, len(self._order))
+        T = self._terms[slots]
+        dl = self._dl[slots]
+        norm = self.kb.k1 * (1 - self.kb.b + self.kb.b * dl / self.kb.avgdl)
+        s = np.zeros(len(slots), np.float32)
+        for t in query_terms:
+            idf = self.kb.idf.get(int(t))
+            if idf is None:
+                continue
+            tf = (T == int(t)).sum(1).astype(np.float32)
+            s += idf * tf * (self.kb.k1 + 1) / (tf + norm)
+        kk = min(k, len(slots))
+        top = np.argsort(-s, kind="stable")[:kk]
+        ids = self._ids[slots[top]]
+        sc = s[top]
+        for did in ids:
+            self._order.move_to_end(int(did))
+        if kk < k:
+            ids = np.pad(ids, (0, k - kk), constant_values=-1)
+            sc = np.pad(sc, (0, k - kk), constant_values=-np.inf)
+        return ids, sc

@@ -1,0 +1,282 @@
+"""RaLMSpec: speculative retrieval + batched verification for iterative RaLM serving
+(paper Algorithm 1), plus the RaLMSeq baseline (Ram et al. 2023 style: retrieve every
+k generated tokens, prepend-replace the latest chunk).
+
+Output preservation: RaLMSpec.serve() produces *exactly* the token sequence of
+RaLMSeq.serve() for the same request (greedy decoding + rank-preserving cache +
+rollback-on-mismatch). tests/test_output_preservation.py asserts this for every
+retriever type; it is the paper's central claim.
+
+Latency ledger: wall-clock segments are recorded per component (G = prefill+decode,
+R = retrieval) exactly like the paper's Figure 4 decomposition. Async verification
+additionally maintains the paper's *analytic* ideal-overlap timeline (their §5.1
+simulated latency) next to the real threaded overlap.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import RaLMConfig
+from repro.core.cache import DenseRetrievalCache, SparseRetrievalCache
+from repro.core.scheduler import OS3
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.retrievers import BM25Retriever
+
+
+@dataclass
+class ServeResult:
+    tokens: List[int]
+    wall_time: float
+    analytic_time: float
+    gen_time: float
+    retrieval_time: float
+    kb_calls: int
+    kb_queries: int
+    rounds: int = 0
+    mismatches: int = 0
+    spec_steps: int = 0
+    strides: List[int] = field(default_factory=list)
+
+    @property
+    def speedup_denominator(self) -> float:
+        return self.wall_time
+
+
+def _chunk(doc: Sequence[int], chunk_len: int) -> tuple:
+    """Fixed-length doc chunk (paper: max retrieved chunk length, padded for jit
+    shape reuse; pad token 1 is reserved)."""
+    d = list(doc)[:chunk_len]
+    return tuple(d + [1] * (chunk_len - len(d)))
+
+
+class _ServerBase:
+    def __init__(self, engine, retriever, rcfg: RaLMConfig,
+                 encoder: Optional[ContextEncoder] = None, chunk_len: int = 64):
+        self.engine = engine
+        self.retriever = retriever
+        self.rcfg = rcfg
+        self.encoder = encoder
+        self.chunk_len = chunk_len
+        self.sparse = isinstance(retriever, BM25Retriever)
+
+    def _query(self):
+        """Context-dependent query summarizing the current context (paper §1)."""
+        toks = self.engine.tokens
+        if self.sparse:
+            return list(toks[-32:])
+        return self.encoder.encode(toks)
+
+    def _retrieve_batch(self, queries, k: int):
+        if self.sparse:
+            return self.retriever.retrieve(queries, k)
+        return self.retriever.retrieve(np.stack(queries), k)
+
+    def _doc(self, doc_id: int) -> tuple:
+        return _chunk(self.retriever.kb.docs[int(doc_id)], self.chunk_len)
+
+    def _done(self) -> bool:
+        return (self.engine.finished
+                or len(self.engine.generated) >= self.rcfg.max_new_tokens)
+
+    def _budget(self) -> int:
+        return self.rcfg.max_new_tokens - len(self.engine.generated)
+
+
+class RaLMSeq(_ServerBase):
+    """The paper's baseline: one KB retrieval every generation stride."""
+
+    def serve(self, prompt: Sequence[int]) -> ServeResult:
+        eng, r = self.engine, self.retriever
+        eng.stats.reset()
+        r0c, r0q, r0t = r.stats.calls, r.stats.queries, r.stats.time
+        r0m = r.stats.modeled_time
+        t0 = time.perf_counter()
+        eng.start(list(prompt)[-self.rcfg.max_prompt_len:])
+        while not self._done():
+            q = self._query()
+            ids, _ = self._retrieve_batch([q], 1)
+            eng.set_doc(self._doc(ids[0, 0]))
+            eng.gen(min(self.rcfg.generation_stride, self._budget()))
+        wall = time.perf_counter() - t0
+        measured_r = r.stats.time - r0t
+        modeled_r = r.stats.modeled_time - r0m
+        return ServeResult(
+            tokens=list(eng.generated), wall_time=wall,
+            analytic_time=wall - measured_r + modeled_r,
+            gen_time=eng.stats.gen_time, retrieval_time=measured_r,
+            kb_calls=r.stats.calls - r0c, kb_queries=r.stats.queries - r0q)
+
+
+class RaLMSpec(_ServerBase):
+    """Algorithm 1 with optional Prefetching (P), OS^3 (S), Async verification (A).
+
+    ``persistent_cache=True`` (beyond-paper) keeps the retrieval cache across
+    requests instead of the paper's per-request cache: topically-related requests
+    warm each other's speculation. Output preservation is unaffected — cache
+    contents only steer *speculation*; verification still compares against the KB.
+    """
+
+    def __init__(self, engine, retriever, rcfg: RaLMConfig,
+                 encoder: Optional[ContextEncoder] = None, chunk_len: int = 64,
+                 persistent_cache: bool = False):
+        super().__init__(engine, retriever, rcfg, encoder, chunk_len)
+        self._pool = ThreadPoolExecutor(max_workers=1) \
+            if rcfg.async_verification else None
+        self._persistent = persistent_cache
+        self._session_cache = None
+
+    def _new_cache(self):
+        if self.sparse:
+            return SparseRetrievalCache(self.retriever.kb, self.rcfg.cache_capacity)
+        return DenseRetrievalCache(self.retriever.kb.embeddings.shape[1],
+                                   self.rcfg.cache_capacity)
+
+    def _cache_insert(self, cache, ids_row):
+        ids_row = [int(i) for i in ids_row if int(i) >= 0]
+        if not ids_row:
+            return
+        if self.sparse:
+            cache.insert(ids_row)
+        else:
+            cache.insert(ids_row, self.retriever.keys_of(ids_row))
+
+    def serve(self, prompt: Sequence[int]) -> ServeResult:
+        eng, r, rcfg = self.engine, self.retriever, self.rcfg
+        eng.stats.reset()
+        r0c, r0q, r0t = r.stats.calls, r.stats.queries, r.stats.time
+        os3 = OS3(window=rcfg.os3_window, gamma_max=rcfg.gamma_max,
+                  max_stride=rcfg.max_stride,
+                  async_mode=rcfg.async_verification) if rcfg.use_os3 else None
+        res = ServeResult(tokens=[], wall_time=0, analytic_time=0, gen_time=0,
+                          retrieval_time=0, kb_calls=0, kb_queries=0)
+        t0 = time.perf_counter()
+        analytic = 0.0
+
+        eng.start(list(prompt)[-rcfg.max_prompt_len:])
+        if self._persistent:
+            if self._session_cache is None:
+                self._session_cache = self._new_cache()
+            cache = self._session_cache
+        else:
+            cache = self._new_cache()
+        # Algorithm 1 line 4: initial retrieval populates the cache (prefetched)
+        q0 = self._query()
+        ids0, _ = self._retrieve_batch([q0], max(rcfg.prefetch_top_k, 1))
+        analytic += r.stats.model_latency(1)
+        self._cache_insert(cache, ids0[0])
+
+        # carried-over speculative step from async overlap
+        carry = None  # (snap, query, spec_id, a_latency)
+
+        # NB: a pending carry is an UNVERIFIED speculative stride — the loop must
+        # not exit on budget/EOS until it has been verified (and corrected if
+        # wrong), or output preservation breaks on the final stride.
+        while not self._done() or carry is not None:
+            stride = os3.stride if os3 else rcfg.speculation_stride
+            snaps, queries, specs, a_times = [], [], [], []
+            if carry is not None:
+                snaps, queries, specs, a_times = [carry[0]], [carry[1]], \
+                    [carry[2]], [carry[3]]
+                carry = None
+            while len(specs) < max(stride, 1) and not self._done():
+                snap, q, did, a = self._spec_step(cache)
+                snaps.append(snap)
+                queries.append(q)
+                specs.append(did)
+                a_times.append(a)
+                analytic += a
+                if os3:
+                    os3.record_speculation(a)
+            if not specs:
+                break
+            res.spec_steps += len(specs)
+            res.strides.append(len(specs))
+
+            if self._pool is not None:
+                fut = self._pool.submit(self._verify, queries)
+                # asynchronous extra speculation step (paper Figure 3) — adaptive:
+                # only speculate while verification is actually pending. When the
+                # retriever is cheaper than one speculation step (ADR), the extra
+                # step is pure downside (paper Table 4 observes exactly this: +A
+                # *hurts* ADR); waiting out the short verification costs less.
+                extra = None
+                b_est = self.retriever.stats.model_latency(len(queries))
+                a_est = sum(a_times) / max(len(a_times), 1)
+                if (not fut.done() and b_est > 0.6 * a_est and not self._done()):
+                    extra = self._spec_step(cache)
+                gt_ids, b_lat, b_model = fut.result()
+                # analytic ideal (paper §4): the verification latency hides behind
+                # the extra speculation step — the round pays max(a_extra, b), and the
+                # extra step's own a is *not* double-counted when carried over.
+                analytic += max(extra[3], b_model) if extra is not None else b_model
+            else:
+                gt_ids, b_lat, b_model = self._verify(queries)
+                analytic += b_model
+                extra = None
+
+            # cache update: top-1 or top-k (prefetch) per verified query
+            for row in gt_ids:
+                self._cache_insert(cache, row[:max(rcfg.prefetch_top_k, 1)])
+
+            m = len(specs)
+            for i in range(len(specs)):
+                if int(specs[i]) != int(gt_ids[i, 0]):
+                    m = i
+                    break
+            if os3:
+                os3.record_verification(b_model, len(specs), m)
+            res.rounds += 1
+
+            if m < len(specs):                      # mis-speculation: rollback
+                res.mismatches += 1
+                extra = None                        # extra step is invalid too
+                self.engine.restore(snaps[m])
+                tc = time.perf_counter()
+                self.engine.set_doc(self._doc(gt_ids[m, 0]))
+                self.engine.gen(min(self.rcfg.generation_stride, self._budget()))
+                analytic += time.perf_counter() - tc
+            if extra is not None:
+                carry = extra
+                if os3:
+                    os3.record_speculation(extra[3])
+
+        res.tokens = list(eng.generated)
+        res.wall_time = time.perf_counter() - t0
+        res.analytic_time = analytic
+        res.gen_time = eng.stats.gen_time
+        res.retrieval_time = r.stats.time - r0t
+        res.kb_calls = r.stats.calls - r0c
+        res.kb_queries = r.stats.queries - r0q
+        return res
+
+    # ---- helpers ----------------------------------------------------------------------
+    def _spec_step(self, cache):
+        """One speculative retrieval + generation stride. Returns
+        (snapshot, query, speculated_doc_id, latency)."""
+        t0 = time.perf_counter()
+        snap = self.engine.snapshot()
+        q = self._query()
+        ids, _ = cache.retrieve(q, 1)
+        did = int(ids[0])
+        if did >= 0:
+            self.engine.set_doc(self._doc(did))
+        # did < 0 (cold cache) keeps the previous doc; verification will correct.
+        self.engine.gen(min(self.rcfg.generation_stride, self._budget()))
+        return snap, q, did, time.perf_counter() - t0
+
+    def _verify(self, queries):
+        """Batched KB retrieval (the verification step).
+
+        Returns (ids, wall_latency, modeled_latency) — the modeled value follows the
+        paper's §A.1 batched-latency shape (see RetrieverStats) and feeds the
+        analytic timeline + OS^3; wall-clock always reported alongside."""
+        t0 = time.perf_counter()
+        k = max(self.rcfg.prefetch_top_k, 1)
+        ids, _ = self._retrieve_batch(queries, k)
+        return ids, time.perf_counter() - t0, \
+            self.retriever.stats.model_latency(len(queries))

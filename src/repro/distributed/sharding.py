@@ -1,0 +1,194 @@
+"""Sharding rules: param/state pytrees -> PartitionSpec trees.
+
+Policy (DESIGN §4):
+  * batch dims over ('pod','data'); 'model' carries tensor parallelism,
+  * 2-D weights: input dim over 'data' (FSDP), output dim over 'model' (TP),
+    flipped for output projections so activations stay batch-major,
+  * MoE experts over 'model' (expert parallelism) when the expert count divides the
+    axis, otherwise fall back to TP over the expert FFN dim,
+  * anything that does not divide cleanly is replicated (never an error) — the same
+    rule set serves the 1-device CPU mesh, 16x16 and 2x16x16.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _fits(dim: int, axes, sizes) -> bool:
+    prod = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        if a not in sizes:
+            return False
+        prod *= sizes[a]
+    return dim % prod == 0
+
+
+def _sanitize(spec: P, shape, sizes) -> P:
+    out = []
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, e in enumerate(entries[: len(shape)]):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        kept = tuple(a for a in axes if a in sizes)
+        if kept and _fits(shape[i], kept, sizes):
+            out.append(kept if len(kept) > 1 else kept[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# weight-name -> base spec (before stacking/sanitation). `B` marks batch axes.
+_IN_OUT = P("data", "model")     # (d_in, d_out)
+_OUT_IN = P("model", "data")     # (d_out_in-major): output projections
+
+
+def _param_rule(path_names, name: str, shape, sizes) -> tuple:
+    """-> (base_spec, semantic_rank). Leading dims beyond semantic_rank are stacked
+    layer storage and get None."""
+    in_moe = "moe" in path_names and "shared" not in path_names
+    if name == "embed":
+        return P("model", "data"), 2
+    if name == "unembed":
+        return P("data", "model"), 2
+    if name in ("wq", "wk", "wv", "up_proj", "in_proj", "w_gates", "w_if"):
+        return _IN_OUT, 2
+    if name in ("wo", "down_proj", "out_proj"):
+        return _OUT_IN, 2
+    if name in ("w_gate", "w_up"):
+        if in_moe:  # experts (E, d, f): EP over 'model', expert-FFN dim f over
+            # 'data'. Sharding f (not d) keeps every contraction local: the
+            # e*d->f matmul has replicated d on both operands, and the f
+            # contraction in w_down psums a small (E,C,d) — no per-layer
+            # weight all-gather (EXPERIMENTS §Perf, kimi train iteration 2).
+            E = shape[-3]
+            if _fits(E, ("model",), sizes):
+                return P("model", None, "data"), 3
+            return P(None, "data", "model"), 3
+        return _IN_OUT, 2
+    if name == "w_down":
+        if in_moe:  # (E, f, d)
+            E = shape[-3]
+            if _fits(E, ("model",), sizes):
+                return P("model", "data", None), 3
+            return P(None, "model", "data"), 3
+        return _OUT_IN, 2
+    if name == "router":
+        return P("data", None), 2
+    if name == "conv_w":
+        return P(None, "model"), 2
+    if name in ("conv_b", "dt_bias", "D", "bq", "bk", "bv"):
+        return P("model"), 1
+    if name in ("A_log", "x_proj"):
+        return P("model", None), 2
+    if name == "dt_proj":
+        return P(None, "model"), 2
+    return P(), 0  # norms, gate biases, r_gates, q_norm/k_norm: replicated
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = True, tp: bool = True):
+    """PartitionSpec tree for a param pytree (works on ShapeDtypeStructs).
+
+    ``fsdp=False`` drops the 'data'-axis weight sharding (weights replicated across
+    the data axis, TP only); ``tp=False`` additionally drops the 'model' axis
+    (pure data parallelism: fully replicated weights). Small models on a big mesh
+    want pure DP — per-use weight all-gathers / per-projection psums dominate their
+    tiny compute otherwise (EXPERIMENTS §Perf, xlstm-350m).
+    """
+    sizes = {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        name = ""
+        for n in reversed(names):
+            if n and not n.isdigit():
+                name = n
+                break
+        shape = leaf.shape
+        base, rank = _param_rule(names, name, shape, sizes)
+        if not fsdp:
+            base = P(*[None if e == "data" else e for e in base])
+        if not tp:
+            base = P(*[None if e == "model" else e for e in base])
+        lead = len(shape) - rank
+        spec = P(*(((None,) * lead) + tuple(base))) if lead > 0 else base
+        return _sanitize(spec, shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def state_specs(state, mesh: Mesh, batch: int, *, kv_shard: str = "replicated"):
+    """PartitionSpec tree for decode state (KV caches + recurrent states).
+
+    ``kv_shard`` controls how the attention KV cache uses the 'model' axis on top
+    of the batch sharding (EXPERIMENTS §Perf, kimi decode_32k iterations):
+      'replicated' — baseline: cache replicated across 'model',
+      'head_dim'   — head_dim over 'model' (contraction-sharded attention),
+      'window'     — cache window over 'model' (sequence-sharded flash decode).
+    """
+    sizes = {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+    ba = batch_axes(mesh)
+
+    def rule(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        shape = leaf.shape
+        nd = len(shape)
+        if name in ("k", "v", "cross_k", "cross_v"):
+            if kv_shard == "head_dim":
+                base = (P(ba, None, None, "model") if batch > 1
+                        else P(None, "data", None, "model"))
+            elif kv_shard == "window":
+                base = (P(ba, "model", None, None) if batch > 1
+                        else P(None, ("data", "model"), None, None))
+            else:
+                base = (P(ba, None, None, None) if batch > 1
+                        else P(None, "data", None, None))
+        elif name == "h" and nd >= 3:       # mamba (B, d_in, N)
+            base = P(ba, "model", None)
+        elif name == "conv":                 # (B, dc-1, d_in)
+            base = P(ba, None, "model")
+        elif name == "C":                    # mlstm (B, H, hd, hd)
+            base = P(ba, "model", None, None)
+        elif name == "n" and nd == 3:
+            base = P(ba, "model", None)
+        elif name in ("c", "n", "h", "m"):   # slstm (B, d_in)
+            base = P(ba, "model")
+        else:
+            base = P()
+        if len(base) < nd and nd == len(base) + 1:   # stacked repeats
+            base = P(*((None,) + tuple(base)))
+        return _sanitize(base, shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(rule, state)
+
+
+def data_specs(batch_dict, mesh: Mesh, *, batch_over_model: bool = False):
+    ba = batch_axes(mesh)
+    if batch_over_model:
+        ba = ba + ("model",)      # pure-DP small models: batch over every axis
+    sizes = {a: int(s) for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+    def rule(_path, leaf):
+        base = P(ba, *([None] * (len(leaf.shape) - 1)))
+        return _sanitize(base, leaf.shape, sizes)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_dict)
+
+
+def to_named(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

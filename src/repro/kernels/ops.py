@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel body is
+semantically validated; on TPU the same calls compile to Mosaic. ``force_ref=True``
+routes to the pure-jnp oracle (used by retrievers when interpret overhead would
+dominate a wall-clock benchmark).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.dense_topk import dense_topk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "force_ref"))
+def dense_topk(queries: jax.Array, kb: jax.Array, k: int,
+               force_ref: bool = False):
+    """Blocked dense retrieval: (B, d) x (N, d) -> top-k (scores, ids)."""
+    if force_ref:
+        return ref.dense_topk_ref(queries, kb, k)
+    return dense_topk_pallas(queries, kb, k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("force_ref",))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, force_ref: bool = False):
+    """Flash-decode GQA attention over a ring KV cache."""
+    if force_ref:
+        return ref.decode_attention_ref(q, k_cache, v_cache, cache_len)
+    return decode_attention_pallas(q, k_cache, v_cache, cache_len,
+                                   interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "prefix_len", "force_ref"))
+def prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0, prefix_len: int = 0,
+                      force_ref: bool = False):
+    """Blockwise (flash) causal attention for prefill — never materializes S x S."""
+    from repro.kernels.prefill_attention import prefill_attention_pallas
+    if force_ref:
+        return ref.prefill_attention_ref(q, k, v, causal=causal, window=window,
+                                         prefix_len=prefix_len)
+    return prefill_attention_pallas(q, k, v, causal=causal, window=window,
+                                    prefix_len=prefix_len, interpret=_interpret())

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_topk_ref(queries: jax.Array, kb: jax.Array, k: int):
+    """queries (B, d); kb (N, d) -> (scores (B, k), ids (B, k))."""
+    s = jnp.einsum("bd,nd->bn", queries.astype(jnp.float32),
+                   kb.astype(jnp.float32))
+    scores, ids = jax.lax.top_k(s, k)
+    return scores, ids.astype(jnp.int32)
+
+
+def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, window: int = 0,
+                          prefix_len: int = 0) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,S,KV,hd) -> (B,S,H,hd). Materializes S x S (oracle)."""
+    from repro.models.layers import plain_attention
+    return plain_attention(q, k, v, causal=causal, window=window,
+                           prefix_len=prefix_len)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         cache_len: jax.Array) -> jax.Array:
+    """q (B, H, hd); caches (B, W, KV, hd); cache_len (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    valid = jnp.arange(W)[None] < jnp.asarray(cache_len).reshape(-1, 1)
+    s = jnp.where(valid[:, None, None, :], s, -3.4e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

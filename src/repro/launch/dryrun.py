@@ -1,0 +1,145 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) pair on the
+16x16 single-pod mesh and the 2x16x16 multi-pod mesh, capturing memory_analysis,
+cost_analysis and the collective-byte census for the roofline (EXPERIMENTS §Dry-run).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+
+The XLA_FLAGS lines below run before ANY jax import (device count locks on first
+init); only the module docstring precedes them.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|f8\w*)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+          "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dtype.split("[")[0][:4].rstrip("["), 2)
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in the (optimized) HLO."""
+    census = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+\s*=\s*(.+?)\s*(\w[\w\-]*)\(", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.rstrip("0123456789.-")
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start" or base == c.replace("-", "_"):
+                shapes = _SHAPE_RE.findall(m.group(1))
+                b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+                census[c]["count"] += 1
+                census[c]["bytes"] += b
+    census["total_bytes"] = sum(v["bytes"] for v in census.values()
+                                if isinstance(v, dict))
+    return census
+
+
+def dryrun_pair(arch: str, shape: str, *, multi_pod: bool = False,
+                verbose: bool = True, **overrides) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    donate = overrides.pop("donate", False)
+    fn, args, shardings = make_step(arch, shape, mesh, **overrides)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    # donate the mutable step state (train: params+opt; decode: caches) — standard
+    # production buffer aliasing; exercised as a §Perf iteration
+    dn = ()
+    if donate:
+        dn = (0, 1) if shape in ("train_4k",) else ((1,) if "decode" in shape or shape == "long_500k" else ())
+    try:
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=shardings,
+                              donate_argnums=dn).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        census = collective_census(hlo)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", -1)) if cost else -1,
+            bytes_accessed=float(cost.get("bytes accessed", -1)) if cost else -1,
+            collectives=census,
+            memory=dict(
+                argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+                output_bytes=getattr(mem, "output_size_in_bytes", 0),
+                temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+                generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", 0),
+            ),
+        )
+        if verbose:
+            print(f"[OK] {arch} x {shape} ({rec['mesh']}) "
+                  f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                  f"flops {rec['flops']:.3g} coll {census['total_bytes']:.3g}B")
+            print("     memory:", rec["memory"])
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a finding, not a crash
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {arch} x {shape} ({rec['mesh']}): {rec['error']}")
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    pairs = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                results.append(dryrun_pair(a, s, multi_pod=mp))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} pairs compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

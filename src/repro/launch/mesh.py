@@ -1,0 +1,28 @@
+"""Production meshes.
+
+A function, not a module-level constant — importing this module never touches jax
+device state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+*before* any jax import; everything else sees the real (1-device CPU) platform.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (CPU tests: 1 device) as a degenerate (data, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link

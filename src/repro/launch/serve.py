@@ -1,0 +1,101 @@
+"""End-to-end RaLM serving driver (the paper's workload).
+
+    PYTHONPATH=src python -m repro.launch.serve --retriever edr --mode both \
+        --requests 5 --variant psa
+
+Builds the synthetic Wikipedia-like corpus, the chosen retriever, a reduced GPT-2-
+class host LM, and serves QA-style requests with RaLMSeq (baseline) and/or RaLMSpec,
+printing the paper-style G/R latency decomposition and the speed-up ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.models.model import build_model
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
+                                        IVFRetriever)
+from repro.serving.engine import ServeEngine
+from repro.training.data import make_queries, synthetic_corpus
+
+
+def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-medium",
+                backend: str = "numpy", seed: int = 0):
+    cfg = reduced(get_config(arch), layers=2, d_model=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    docs = synthetic_corpus(n_docs, cfg.vocab_size)
+    enc = ContextEncoder(cfg.vocab_size, d=64)
+    if retriever == "sr":
+        kb = SparseKB.build(docs)
+        retr = BM25Retriever(kb)
+    else:
+        kb = DenseKB.build(docs, enc)
+        retr = (ExactDenseRetriever(kb, backend=backend) if retriever == "edr"
+                else IVFRetriever(kb))
+    return cfg, model, params, docs, enc, retr
+
+
+def variant_config(variant: str, base: RaLMConfig) -> RaLMConfig:
+    """'', 'p', 's', 'a', 'ps', 'sa', 'pa', 'psa' — paper Table 1/4 naming."""
+    return dataclasses.replace(
+        base,
+        prefetch_top_k=20 if "p" in variant else 1,
+        use_os3="s" in variant,
+        async_verification="a" in variant,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retriever", choices=["edr", "adr", "sr"], default="edr")
+    ap.add_argument("--mode", choices=["seq", "spec", "both"], default="both")
+    ap.add_argument("--variant", default="psa",
+                    help="subset of 'psa': prefetch / OS3 scheduler / async")
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--n-docs", type=int, default=20000)
+    ap.add_argument("--stride", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg, model, params, docs, enc, retr = build_stack(
+        args.retriever, n_docs=args.n_docs)
+    rcfg = variant_config(args.variant.replace("-", ""),
+                          RaLMConfig(max_new_tokens=args.max_new,
+                                     speculation_stride=args.stride))
+    prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
+    eng = ServeEngine(model, params, cache_window=512)
+
+    def run(server, label):
+        tot_w = tot_g = tot_r = 0.0
+        toks = []
+        for p in prompts:
+            r = server.serve(p)
+            tot_w += r.wall_time
+            tot_g += r.gen_time
+            tot_r += r.retrieval_time
+            toks.append(r.tokens)
+        print(f"{label:14s} wall {tot_w:7.2f}s  G {tot_g:6.2f}s  R {tot_r:6.2f}s")
+        return tot_w, toks
+
+    results = {}
+    if args.mode in ("seq", "both"):
+        results["seq"] = run(RaLMSeq(eng, retr, rcfg, enc), "RaLMSeq")
+    if args.mode in ("spec", "both"):
+        label = "RaLMSpec" + ("+" + args.variant.upper() if args.variant else "")
+        results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc), label)
+    if len(results) == 2:
+        same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
+        print(f"outputs identical: {same}   "
+              f"speed-up {results['seq'][0] / max(results['spec'][0], 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

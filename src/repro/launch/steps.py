@@ -1,0 +1,131 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape) pair.
+
+``make_step(arch, shape, mesh)`` returns (fn, arg_structs, in_shardings) such that
+
+    jax.jit(fn, in_shardings=in_shardings).lower(*arg_structs).compile()
+
+is the multi-pod dry-run for that pair. No arrays are ever allocated — params,
+optimizer state and decode caches are all ShapeDtypeStructs (weak-type-correct).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import LONG_CONTEXT_WINDOW, get_config, get_shape
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed.sharding import (batch_axes, data_specs, param_specs,
+                                        state_specs)
+from repro.models.model import build_model
+from repro.training.optimizer import AdamWConfig, init_adamw
+from repro.training.trainer import make_train_step
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _extra_structs(cfg: ModelConfig, B: int, dtype) -> dict:
+    ex = {}
+    if cfg.family == "audio":
+        ex["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        ex["patches"] = jax.ShapeDtypeStruct((B, cfg.vision_patches, cfg.d_model), dtype)
+    return ex
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-driven config tweaks: dispatch chunking for MoE at scale; the sliding
+    window for the sub-quadratic long-context variant is applied via the decode
+    cache width (W), not the config."""
+    if cfg.moe is not None:
+        # keep the (E, C, d) dispatch buffer bounded: ~8k tokens per chunk globally
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_chunk=8192))
+    return cfg
+
+
+def microbatches_for(shape: InputShape, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    rows_per_shard = shape.global_batch
+    for a in batch_axes(mesh):
+        rows_per_shard //= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    # target ~1 sequence per data-shard per microbatch
+    return max(1, min(shape.global_batch, rows_per_shard))
+
+
+def make_step(arch: str, shape_name: str, mesh, *, dtype=jnp.bfloat16,
+              num_microbatches: Optional[int] = None, kv_shard: str = "window",
+              fsdp: bool = True, tp: bool = True,
+              dispatch_chunk: Optional[int] = None):
+    cfg = adapt_config(get_config(arch), get_shape(shape_name))
+    if dispatch_chunk and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_chunk=dispatch_chunk))
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    params_s = jax.eval_shape(lambda k: model.init(k, dtype), jax.random.PRNGKey(0))
+    pspec = param_specs(params_s, mesh, fsdp=fsdp, tp=tp)
+    psh = _named(mesh, pspec)
+
+    if shape.kind == "train":
+        extra = _extra_structs(cfg, B, dtype)
+        S_text = S - (cfg.vision_patches if cfg.family == "vlm" else 0)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S_text), jnp.int32),
+            **extra,
+        }
+        opt_s = jax.eval_shape(init_adamw, params_s)
+        ospec = param_specs(opt_s, mesh, fsdp=fsdp, tp=tp)
+        nm = num_microbatches or microbatches_for(shape, mesh)
+        step = make_train_step(model, AdamWConfig(), remat=True,
+                               num_microbatches=nm)
+        args = (params_s, opt_s, batch)
+        shardings = (psh, _named(mesh, ospec), _named(mesh, data_specs(batch, mesh)))
+        return step, args, shardings
+
+    if shape.kind == "prefill":
+        extra = _extra_structs(cfg, B, dtype)
+        S_text = S - (cfg.vision_patches if cfg.family == "vlm" else 0)
+        tokens = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+
+        def prefill_step(params, tokens, extra):
+            logits, aux = model.forward(params, tokens,
+                                        extra=extra or None, last_only=True)
+            return logits
+
+        tok_spec = data_specs({"tokens": tokens}, mesh)["tokens"]
+        ex_spec = data_specs(extra, mesh)
+        args = (params_s, tokens, extra)
+        shardings = (psh, NamedSharding(mesh, tok_spec), _named(mesh, ex_spec))
+        return prefill_step, args, shardings
+
+    # decode: ONE new token against a cache of seq_len (ring window for 500k)
+    W = LONG_CONTEXT_WINDOW if shape.seq_len > 100_000 else shape.seq_len
+    state_s = jax.eval_shape(
+        lambda: model.init_decode_state_stacked(B, W, dtype))
+    sspec = state_specs(state_s, mesh, B, kv_shard=kv_shard)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_step(params, state, token, pos):
+        return model.decode_step_stacked(params, state, token, pos)
+
+    tok_spec = data_specs({"t": token}, mesh)["t"]
+    args = (params_s, state_s, token, pos)
+    shardings = (psh, _named(mesh, sspec), NamedSharding(mesh, tok_spec),
+                 NamedSharding(mesh, P()))
+    return decode_step, args, shardings

@@ -1,0 +1,385 @@
+"""State-space and recurrent sequence mixers: Mamba (Jamba's SSM), mLSTM and sLSTM
+(xLSTM).
+
+TPU adaptation (DESIGN §3): the CUDA selective-scan kernel becomes a **chunked
+associative scan** — `lax.scan` over chunks of the sequence carrying the recurrent
+state, `lax.associative_scan` within a chunk. The chunk bound keeps the materialized
+(B, chunk, d_inner, d_state) tensor inside a VMEM-sized budget instead of the
+O(B*S*d_inner*d_state) blow-up of a naive parallel scan.
+
+mLSTM uses the chunkwise linear-attention formulation (intra-chunk quadratic,
+inter-chunk recurrent); the stepwise recurrence doubles as the decode step and the
+test oracle. sLSTM is inherently sequential (per the xLSTM paper) and is a plain
+`lax.scan` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+# ======================================================================================
+# Mamba
+# ======================================================================================
+def mamba_dims(cfg) -> Tuple[int, int, int]:
+    d_in = cfg.ssm.expand * cfg.d_model
+    dt_rank = max(1, cfg.d_model // 16)
+    return d_in, cfg.ssm.d_state, dt_rank
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, N, dt_rank = mamba_dims(cfg)
+    dc = cfg.ssm.d_conv
+    keys = jax.random.split(key, 7)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d, 2 * d_in)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (dc, d_in)) / math.sqrt(dc)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": (jax.random.normal(keys[2], (d_in, dt_rank + 2 * N))
+                   / math.sqrt(d_in)).astype(dtype),
+        "dt_proj": (jax.random.normal(keys[3], (dt_rank, d_in))
+                    / math.sqrt(dt_rank)).astype(dtype),
+        "dt_bias": jnp.full((d_in,), -2.0, jnp.float32),   # softplus(-2) ~ 0.13
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, 1))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(keys[4], (d_in, d)) / math.sqrt(d_in)).astype(dtype),
+    }
+
+
+def _mamba_bcdt(p, cfg, u):
+    """u: (..., d_in) conv+silu'd input -> (B_mat, C_mat, dt) per position."""
+    _, N, dt_rank = mamba_dims(cfg)
+    proj = jnp.einsum("...i,ij->...j", u, p["x_proj"]).astype(jnp.float32)
+    dt_r, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,ri->...i", dt_r, p["dt_proj"].astype(jnp.float32))
+                         + p["dt_bias"])                    # (..., d_in)
+    return Bm, Cm, dt
+
+
+def _causal_conv(p, x_in, conv_state=None):
+    """Depthwise causal conv. x_in: (B, S, d_in). conv_state: (B, dc-1, d_in)."""
+    dc = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x_in.shape[0], dc - 1, x_in.shape[2]), x_in.dtype)
+    else:
+        pad = conv_state.astype(x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1)               # (B, S+dc-1, d_in)
+    out = sum(xp[:, i:i + x_in.shape[1]] * p["conv_w"][i] for i in range(dc))
+    new_state = xp[:, -(dc - 1):] if dc > 1 else pad
+    return out + p["conv_b"], new_state
+
+
+def apply_mamba(p, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence selective scan. x: (B, S, d)."""
+    B, S, d = x.shape
+    d_in, N, _ = mamba_dims(cfg)
+    chunk = min(cfg.ssm.chunk, S)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, _ = _causal_conv(p, x_in)
+    u = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+    Bm, Cm, dt = _mamba_bcdt(p, cfg, u)                     # (B,S,N),(B,S,N),(B,S,d_in)
+    A = -jnp.exp(p["A_log"])                                # (d_in, N)
+
+    # decay a_t = exp(dt_t * A)  (B,S,d_in,N);  drive b_t = dt_t * B_t * u_t
+    uf = u.astype(jnp.float32)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        uf = jnp.pad(uf, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(h, inputs):
+        uc, Bc, Cc, dtc = inputs                            # (B, L, ...)
+        a = jnp.exp(dtc[..., None] * A)                     # (B,L,d_in,N)
+        b = (dtc * uc)[..., None] * Bc[:, :, None, :]       # (B,L,d_in,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_sc * h[:, None] + b_sc                       # (B,L,d_in,N)
+        y = jnp.einsum("blin,bln->bli", hs, Cc)             # (B,L,d_in)
+        return hs[:, -1], y
+
+    u_ch = uf.reshape(B, n_chunks, chunk, d_in).swapaxes(0, 1)
+    B_ch = Bm.reshape(B, n_chunks, chunk, N).swapaxes(0, 1)
+    C_ch = Cm.reshape(B, n_chunks, chunk, N).swapaxes(0, 1)
+    dt_ch = dt.reshape(B, n_chunks, chunk, d_in).swapaxes(0, 1)
+    h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (u_ch, B_ch, C_ch, dt_ch))
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, d_in)[:, :S]
+    y = y + uf[:, :S] * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> dict:
+    d_in, N, _ = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, d_in, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, d_in), dtype),
+    }
+
+
+def apply_mamba_step(p, cfg, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """One decode step. x: (B, 1, d)."""
+    B = x.shape[0]
+    d_in, N, _ = mamba_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c, new_conv = _causal_conv(p, x_in, state["conv"])
+    u = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+    Bm, Cm, dt = _mamba_bcdt(p, cfg, u)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)                       # (B,d_in,N)
+    b = (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0])[:, None]       # (B,1,d_in)
+    y = y + u.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"h": h, "conv": new_conv}
+
+
+# ======================================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ======================================================================================
+def mlstm_dims(cfg) -> Tuple[int, int]:
+    d_in = 2 * cfg.d_model        # proj_factor 2 per xLSTM mLSTM block
+    hd = d_in // cfg.num_heads
+    return d_in, hd
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in, hd = mlstm_dims(cfg)
+    H = cfg.num_heads
+    keys = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d)
+    sci = 1.0 / math.sqrt(d_in)
+    return {
+        "up_proj": (jax.random.normal(keys[0], (d, 2 * d_in)) * sc).astype(dtype),
+        "wq": (jax.random.normal(keys[1], (d_in, d_in)) * sci).astype(dtype),
+        "wk": (jax.random.normal(keys[2], (d_in, d_in)) * sci).astype(dtype),
+        "wv": (jax.random.normal(keys[3], (d_in, d_in)) * sci).astype(dtype),
+        "w_if": (jax.random.normal(keys[4], (d_in, 2 * H)) * sci).astype(jnp.float32),
+        "b_i": jnp.full((H,), -3.0, jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "down_proj": (jax.random.normal(keys[5], (d_in, d)) * sci).astype(dtype),
+    }
+
+
+def _mlstm_qkvif(p, cfg, xu):
+    """xu: (B, S, d_in) -> per-head q,k,v (B,S,H,hd), log_f, log_i (B,S,H)."""
+    B, S, d_in = xu.shape
+    H = cfg.num_heads
+    hd = d_in // H
+    q = jnp.einsum("bsi,ij->bsj", xu, p["wq"]).reshape(B, S, H, hd)
+    k = (jnp.einsum("bsi,ij->bsj", xu, p["wk"]) / math.sqrt(hd)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsi,ij->bsj", xu, p["wv"]).reshape(B, S, H, hd)
+    gates = jnp.einsum("bsi,ih->bsh", xu.astype(jnp.float32), p["w_if"])
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    log_i = jnp.clip(gi + p["b_i"], -12.0, 4.0)             # capped exp input gate
+    log_f = jax.nn.log_sigmoid(gf + p["b_f"])               # f in (0,1)
+    return q, k, v, log_f, log_i
+
+
+def apply_mlstm(p, cfg, x: jax.Array) -> jax.Array:
+    """Chunkwise-parallel mLSTM. x: (B, S, d)."""
+    B, S, d = x.shape
+    d_in, hd = mlstm_dims(cfg)
+    H = cfg.num_heads
+    chunk = min(cfg.ssm.chunk if cfg.ssm else 256, S)
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_f, log_i = _mlstm_qkvif(p, cfg, xu)
+
+    n_ch = -(-S // chunk)
+    pad = n_ch * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))   # log f=0 -> f=1 ok
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+
+    def resh(t):
+        return t.reshape((B, n_ch, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lfc, lic = map(resh, (q, k, v, log_f, log_i))
+
+    def chunk_body(carry, inp):
+        C0, n0 = carry                                       # (B,H,hd,hd), (B,H,hd)
+        qb, kb, vb, lf, li = inp                             # (B,L,H,*)
+        cf = jnp.cumsum(lf, axis=1)                          # (B,L,H) cumulative log f
+        # intra-chunk: w_ij = exp(cf_i - cf_j + li_j) for j <= i  (<= exp(li) stable)
+        qk = jnp.einsum("bihd,bjhd->bhij", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32))              # (B,H,L,L)
+        logw = (cf[:, :, None] - cf[:, None, :] + li[:, None, :])  # (B,L,L,H)
+        logw = jnp.moveaxis(logw, 3, 1)                      # (B,H,L,L)
+        L = qb.shape[1]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal, jnp.exp(logw), 0.0)
+        a = qk * w                                           # weighted scores
+        inter_scale = jnp.exp(cf)                            # (B,L,H)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", a, vb.astype(jnp.float32))
+        y_inter = jnp.einsum("bihd,bhde->bihe", qb.astype(jnp.float32), C0) \
+            * inter_scale[..., None]
+        den_intra = jnp.sum(a, axis=-1)                      # (B,H,L)
+        den_inter = jnp.einsum("bihd,bhd->bhi", qb.astype(jnp.float32), n0) \
+            * jnp.moveaxis(inter_scale, 1, 2)
+        den = jnp.abs(den_intra + den_inter)                 # (B,H,L)
+        y = (y_intra + y_inter) / jnp.maximum(jnp.moveaxis(den, 1, 2)[..., None], 1.0)
+        # end-of-chunk state
+        decay_to_end = jnp.exp(cf[:, -1:, :] - cf + li)      # (B,L,H)
+        C1 = jnp.exp(cf[:, -1])[..., None, None] * C0 + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", decay_to_end, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n1 = jnp.exp(cf[:, -1])[..., None] * n0 + jnp.einsum(
+            "bjh,bjhd->bhd", decay_to_end, kb.astype(jnp.float32))
+        return (C1, n1), y
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, (C0, n0), (qc, kc, vc, lfc, lic))
+    y = ys.swapaxes(0, 1).reshape(B, n_ch * chunk, H, hd)[:, :S]
+    y = y.reshape(B, S, d_in)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["down_proj"])
+
+
+def init_mlstm_state(cfg, batch: int, dtype) -> dict:
+    d_in, hd = mlstm_dims(cfg)
+    H = cfg.num_heads
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+    }
+
+
+def apply_mlstm_step(p, cfg, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    """One decode step (the stepwise recurrence; also the chunkwise oracle)."""
+    B = x.shape[0]
+    d_in, hd = mlstm_dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_f, log_i = _mlstm_qkvif(p, cfg, xu)         # (B,1,H,hd)
+    f = jnp.exp(log_f[:, 0])[..., None, None]                # (B,H,1,1)
+    i = jnp.exp(log_i[:, 0])[..., None, None]
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    C = f * state["C"] + i * jnp.einsum("bhd,bhe->bhde",
+                                        jnp.moveaxis(kf, 1, 1), vf)
+    n = f[..., 0] * state["n"] + i[..., 0] * kf
+    qf = q[:, 0].astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    y = num / jnp.maximum(den, 1.0)[..., None]               # (B,H,hd)
+    y = y.reshape(B, 1, d_in)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["down_proj"])
+    return out, {"C": C, "n": n}
+
+
+# ======================================================================================
+# sLSTM (xLSTM scalar-memory block) — inherently sequential
+# ======================================================================================
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.num_heads
+    hd = d_in // H
+    keys = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    return {
+        "up_proj": (jax.random.normal(keys[0], (d, 2 * d_in)) * sc).astype(dtype),
+        "w_gates": (jax.random.normal(keys[1], (d_in, 4 * d_in))
+                    / math.sqrt(d_in)).astype(jnp.float32),
+        # block-diagonal recurrent weights: per head (hd, 4*hd)
+        "r_gates": (jax.random.normal(keys[2], (H, hd, 4 * hd))
+                    / math.sqrt(hd)).astype(jnp.float32),
+        "b_gates": jnp.concatenate([
+            jnp.full((d_in,), -3.0), jnp.full((d_in,), 3.0),
+            jnp.zeros((d_in,)), jnp.zeros((d_in,))]).astype(jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "down_proj": (jax.random.normal(keys[3], (d_in, d))
+                      / math.sqrt(d_in)).astype(dtype),
+    }
+
+
+def init_slstm_state(cfg, batch: int, dtype) -> dict:
+    d_in = 2 * cfg.d_model
+    z = jnp.zeros((batch, d_in), jnp.float32)
+    return {"c": z, "n": z + _EPS, "h": z, "m": z - 10.0}
+
+
+def _slstm_cell(p, cfg, xw, st):
+    """xw: (B, 4*d_in) precomputed input contribution; st: state dict."""
+    H = cfg.num_heads
+    B, d4 = xw.shape
+    d_in = d4 // 4
+    hd = d_in // H
+    hview = st["h"].reshape(B, H, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", hview, p["r_gates"]).reshape(B, 4 * d_in)
+    gates = xw + rec + p["b_gates"]
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + st["m"], jnp.clip(gi, -12.0, 8.0))
+    i = jnp.exp(jnp.clip(gi, -12.0, 8.0) - m_new)
+    f = jnp.exp(log_f + st["m"] - m_new)
+    c = f * st["c"] + i * jnp.tanh(gz)
+    n = f * st["n"] + i
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, _EPS)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm(p, cfg, x: jax.Array) -> jax.Array:
+    """Full-sequence sLSTM via lax.scan over time. x: (B, S, d)."""
+    B, S, d = x.shape
+    d_in = 2 * d
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    xw = jnp.einsum("bsi,ij->bsj", xu.astype(jnp.float32), p["w_gates"])
+
+    def step(st, xw_t):
+        st = _slstm_cell(p, cfg, xw_t, st)
+        return st, st["h"]
+
+    st0 = init_slstm_state(cfg, B, x.dtype)
+    _, hs = jax.lax.scan(step, st0, xw.swapaxes(0, 1))       # (S,B,d_in)
+    y = hs.swapaxes(0, 1)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["down_proj"])
+
+
+def apply_slstm_step(p, cfg, x: jax.Array, state: dict) -> Tuple[jax.Array, dict]:
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    xw = jnp.einsum("bsi,ij->bsj", xu.astype(jnp.float32), p["w_gates"])[:, 0]
+    st = _slstm_cell(p, cfg, xw, state)
+    y = st["h"][:, None]
+    from repro.models.layers import rms_norm
+    y = rms_norm(y.astype(x.dtype), p["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["down_proj"]), st

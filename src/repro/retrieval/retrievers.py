@@ -1,0 +1,177 @@
+"""The three retriever classes the paper evaluates.
+
+  * ExactDenseRetriever  (EDR) — brute-force inner product over the flat index.
+                                 Backend 'numpy' for CPU serving benchmarks; backend
+                                 'kernel' routes through the Pallas blocked top-k
+                                 (interpret mode on CPU, MXU-tiled on TPU).
+  * IVFRetriever         (ADR) — the TPU-native replacement for DPR-HNSW (DESIGN §3):
+                                 k-means coarse quantizer + nprobe cluster scan.
+                                 Cheap, less accurate, latency ~ linear in batch with
+                                 an intercept — matching the paper's §A.1 measurement.
+  * BM25Retriever        (SR)  — bag-of-words over the SparseKB.
+
+All retrievers expose:  retrieve(queries, k) -> (ids (B,k) int64, scores (B,k)).
+``queries`` is (B, d) embeddings for dense retrievers, a list of term-lists for BM25.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.retrieval.kb import DenseKB, SparseKB
+
+
+class RetrieverStats:
+    """Per-retriever call ledger (the R component of the paper's G/R decomposition)
+    plus a batched-latency MODEL with the paper's §A.1 shape.
+
+    This container has a single CPU core, so a batch-B matmul genuinely costs ~B x
+    a GEMV (compute-bound); on the paper's hardware (FAISS on A10 + 15 CPUs) batched
+    retrieval is nearly constant-cost for EDR/SR and linear-with-intercept for ADR.
+    The model reproduces those shapes, calibrated online from the *measured*
+    single-query unit cost, and feeds the benchmarks' 'modeled' timeline — exactly
+    the strategy the paper itself uses for async verification under the GIL.
+    Wall-clock numbers are always reported alongside.
+
+      EDR/SR: t(B) = unit * (1 + 0.05 * (B - 1))      (near-constant total)
+      ADR:    t(B) = unit * (0.55 + 0.45 * B)          (linear, large intercept)
+    """
+
+    def __init__(self, kind: str = "const"):
+        self.kind = kind
+        self.calls = 0
+        self.queries = 0
+        self.time = 0.0
+        self.modeled_time = 0.0
+        self._unit: Optional[float] = None
+
+    def factor(self, B: int) -> float:
+        if self.kind == "linear_intercept":
+            return 0.55 + 0.45 * B
+        return 1.0 + 0.05 * (B - 1)
+
+    def add(self, n_queries: int, dt: float):
+        self.calls += 1
+        self.queries += n_queries
+        self.time += dt
+        # calibrate the unit cost from SINGLE-query calls only — on this 1-core box
+        # a batch-B matmul costs ~B x the GEMV, which would pollute the unit
+        if n_queries == 1:
+            self._unit = dt if self._unit is None else 0.8 * self._unit + 0.2 * dt
+        elif self._unit is None:
+            self._unit = dt / n_queries    # conservative bootstrap
+        self.modeled_time += self.model_latency(n_queries)
+
+    def model_latency(self, B: int) -> float:
+        return (self._unit or 0.0) * self.factor(B)
+
+
+class ExactDenseRetriever:
+    name = "EDR"
+
+    def __init__(self, kb: DenseKB, backend: str = "numpy"):
+        self.kb = kb
+        self.backend = backend
+        self.stats = RetrieverStats("const")
+        self._kernel_fn = None
+        if backend == "kernel":
+            from repro.kernels.ops import dense_topk
+            self._kernel_fn = dense_topk
+
+    def retrieve(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        t0 = time.perf_counter()
+        if self._kernel_fn is not None:
+            import jax.numpy as jnp
+            scores, ids = self._kernel_fn(jnp.asarray(queries),
+                                          jnp.asarray(self.kb.embeddings), k)
+            ids, scores = np.asarray(ids, np.int64), np.asarray(scores)
+        else:
+            s = queries @ self.kb.embeddings.T               # (B, N)
+            ids = np.argpartition(-s, kth=min(k, s.shape[1] - 1), axis=1)[:, :k]
+            part = np.take_along_axis(s, ids, axis=1)
+            order = np.argsort(-part, axis=1, kind="stable")
+            ids = np.take_along_axis(ids, order, axis=1).astype(np.int64)
+            scores = np.take_along_axis(part, order, axis=1)
+        self.stats.add(queries.shape[0], time.perf_counter() - t0)
+        return ids, scores
+
+    def keys_of(self, ids) -> np.ndarray:
+        return self.kb.embeddings[np.asarray(ids, np.int64)]
+
+
+class IVFRetriever:
+    name = "ADR"
+
+    def __init__(self, kb: DenseKB, n_clusters: int = 64, nprobe: int = 4,
+                 iters: int = 8, seed: int = 3):
+        self.kb = kb
+        self.nprobe = nprobe
+        self.stats = RetrieverStats("linear_intercept")
+        g = np.random.default_rng(seed)
+        X = kb.embeddings
+        self.centroids = X[g.choice(X.shape[0], n_clusters, replace=False)].copy()
+        for _ in range(iters):                                # Lloyd iterations
+            assign = np.argmax(X @ self.centroids.T, axis=1)
+            for c in range(n_clusters):
+                pts = X[assign == c]
+                if len(pts):
+                    v = pts.mean(0)
+                    self.centroids[c] = v / max(np.linalg.norm(v), 1e-9)
+        assign = np.argmax(X @ self.centroids.T, axis=1)
+        self.buckets = [np.where(assign == c)[0] for c in range(n_clusters)]
+
+    def retrieve(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        t0 = time.perf_counter()
+        cs = np.argsort(-(queries @ self.centroids.T), axis=1)[:, :self.nprobe]
+        all_ids, all_scores = [], []
+        for qi in range(queries.shape[0]):                    # per query: the intercept
+            cand = np.concatenate([self.buckets[c] for c in cs[qi]])
+            if cand.size == 0:
+                cand = np.arange(min(k, self.kb.size))
+            s = self.kb.embeddings[cand] @ queries[qi]
+            kk = min(k, cand.size)
+            top = np.argpartition(-s, kth=kk - 1)[:kk]
+            top = top[np.argsort(-s[top], kind="stable")]
+            ids = cand[top]
+            sc = s[top]
+            if kk < k:                                        # pad
+                ids = np.pad(ids, (0, k - kk), constant_values=ids[-1])
+                sc = np.pad(sc, (0, k - kk), constant_values=sc[-1])
+            all_ids.append(ids)
+            all_scores.append(sc)
+        self.stats.add(queries.shape[0], time.perf_counter() - t0)
+        return np.stack(all_ids).astype(np.int64), np.stack(all_scores)
+
+    def keys_of(self, ids) -> np.ndarray:
+        return self.kb.embeddings[np.asarray(ids, np.int64)]
+
+
+class BM25Retriever:
+    name = "SR"
+
+    def __init__(self, kb: SparseKB):
+        self.kb = kb
+        self.stats = RetrieverStats("const")
+
+    def retrieve(self, queries: List[list], k: int) -> Tuple[np.ndarray, np.ndarray]:
+        if queries and isinstance(queries[0], (int, np.integer)):
+            queries = [queries]
+        t0 = time.perf_counter()
+        ids, scores = [], []
+        for q in queries:
+            s = self.kb.score(q)
+            kk = min(k, s.shape[0])
+            top = np.argpartition(-s, kth=kk - 1)[:kk]
+            top = top[np.argsort(-s[top], kind="stable")]
+            ids.append(top)
+            scores.append(s[top])
+        self.stats.add(len(queries), time.perf_counter() - t0)
+        return np.stack(ids).astype(np.int64), np.stack(scores)
+
+    def keys_of(self, ids) -> np.ndarray:
+        """Sparse 'keys' are the per-doc term arrays."""
+        return self.kb.terms[np.asarray(ids, np.int64)]

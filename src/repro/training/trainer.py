@@ -1,0 +1,101 @@
+"""Train-step factory: loss, grads, AdamW update, all pjit-shardable."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, build_model
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Next-token cross entropy; labels < 0 are masked (e.g. image prefix)."""
+    V = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(model: Model, *, window: int = 0, remat: bool = False):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        extra = {k: v for k, v in batch.items()
+                 if k in ("frames", "patches")} or None
+        logits, aux = model.forward(params, batch["tokens"], extra=extra,
+                                    window=window, remat=remat)
+        # align label length with logits (vlm prepends patches)
+        labels = batch["labels"]
+        S = logits.shape[1]
+        if labels.shape[1] < S:  # image prefix positions carry no loss
+            pad = -jnp.ones((labels.shape[0], S - labels.shape[1]), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        # shift: predict token t+1 from position t
+        loss = lm_loss(logits[:, :-1], labels[:, 1:])
+        return loss + aux, {"loss": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *, window: int = 0,
+                    remat: bool = False, num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``num_microbatches`` > 1 enables gradient accumulation (scan over microbatches,
+    f32 grad accumulator) — the standard way to fit the 4k x 256 training shapes'
+    activation footprint on a 256-chip pod (DESIGN §4 / EXPERIMENTS §Dry-run).
+    """
+    # remat is applied per BLOCK inside the layer scan (see Model.forward) — a
+    # loss-level checkpoint still leaves the scan storing per-layer intermediates
+    loss_fn = make_loss_fn(model, window=window, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if num_microbatches <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def resh(x):
+                return x.reshape((num_microbatches, x.shape[0] // num_microbatches)
+                                 + x.shape[1:])
+
+            micro = jax.tree.map(resh, batch)
+
+            def body(acc, mb):
+                (l, p), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, (l, p)
+
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            grads, (ls, ps) = jax.lax.scan(body, zero, micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(ls)
+            parts = jax.tree.map(jnp.mean, ps)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = dict(parts, total=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return dict(parts, total=loss)
+
+    return eval_step
+
+
+def init_train(cfg: ModelConfig, key, opt_cfg: Optional[AdamWConfig] = None,
+               dtype=jnp.float32):
+    model = build_model(cfg)
+    params = model.init(key, dtype)
+    opt_state = init_adamw(params)
+    return model, params, opt_state

@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for the paper's rank-preservation invariant
+(§3): if the KB top-1 document for a query is in the local cache, cache retrieval
+returns exactly that document — for both dense and BM25 scoring."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cache import DenseRetrievalCache, SparseRetrievalCache
+from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.retrievers import BM25Retriever, ExactDenseRetriever
+from repro.training.data import synthetic_corpus
+
+
+@st.composite
+def dense_case(draw):
+    n = draw(st.integers(8, 64))
+    d = draw(st.sampled_from([4, 8, 16]))
+    seed = draw(st.integers(0, 10_000))
+    g = np.random.default_rng(seed)
+    emb = g.standard_normal((n, d)).astype(np.float32)
+    emb /= np.linalg.norm(emb, axis=1, keepdims=True) + 1e-9
+    q = g.standard_normal(d).astype(np.float32)
+    cached = draw(st.sets(st.integers(0, n - 1), min_size=1, max_size=n))
+    return emb, q, sorted(cached)
+
+
+@given(dense_case())
+@settings(max_examples=80, deadline=None)
+def test_dense_rank_preservation(case):
+    emb, q, cached = case
+    top_kb = int(np.argmax(emb @ q))
+    cache = DenseRetrievalCache(emb.shape[1], capacity=len(cached) + 4)
+    cache.insert(np.asarray(cached), emb[cached])
+    ids, _ = cache.retrieve(q, 1)
+    if top_kb in cached:
+        assert int(ids[0]) == top_kb
+    else:
+        # cache returns its best — which can never out-score the KB top-1
+        best_cached = cached[int(np.argmax(emb[cached] @ q))]
+        assert int(ids[0]) == best_cached
+
+
+@given(st.integers(0, 5000), st.integers(2, 6))
+@settings(max_examples=40, deadline=None)
+def test_sparse_rank_preservation(seed, nq):
+    docs = synthetic_corpus(60, 256, n_topics=4, seed=seed % 97)
+    kb = SparseKB.build(docs)
+    g = np.random.default_rng(seed)
+    query = list(g.integers(2, 256, nq))
+    kb_scores = kb.score(query)
+    top_kb = int(np.argmax(kb_scores))
+    cached = sorted(set(g.integers(0, 60, 20).tolist()) | {top_kb})
+    cache = SparseRetrievalCache(kb, capacity=64)
+    cache.insert(np.asarray(cached))
+    ids, sc = cache.retrieve(query, 1)
+    # identical metric + global stats => cached top-1 == KB top-1 when present
+    assert int(ids[0]) == top_kb or np.isclose(sc[0], kb_scores[top_kb])
+
+
+@given(st.integers(2, 30), st.integers(1, 120))
+@settings(max_examples=40, deadline=None)
+def test_cache_lru_eviction_and_capacity(cap, n_ins):
+    d = 8
+    g = np.random.default_rng(cap * 1000 + n_ins)
+    cache = DenseRetrievalCache(d, capacity=cap)
+    keys = g.standard_normal((n_ins, d)).astype(np.float32)
+    for i in range(n_ins):
+        cache.insert([i], keys[i:i + 1])
+    assert cache.size == min(cap, n_ins)
+    # most recent insertions survive
+    for i in range(max(0, n_ins - cap), n_ins):
+        assert i in cache
+
+
+def test_cache_scores_equal_kb_scores_dense():
+    docs = synthetic_corpus(200, 512)
+    from repro.retrieval.encoder import ContextEncoder
+    enc = ContextEncoder(512, d=16)
+    kb = DenseKB.build(docs, enc)
+    r = ExactDenseRetriever(kb)
+    q = enc.encode(docs[5][:10])
+    ids, scores = r.retrieve(q[None], 8)
+    cache = DenseRetrievalCache(16, 64)
+    cache.insert(ids[0], r.keys_of(ids[0]))
+    cids, cscores = cache.retrieve(q, 8)
+    np.testing.assert_allclose(np.sort(cscores)[::-1], np.sort(scores[0])[::-1],
+                               atol=1e-5)
+    assert int(cids[0]) == int(ids[0, 0])
+
+
+def test_bm25_cache_scores_equal_kb_scores():
+    docs = synthetic_corpus(120, 256)
+    kb = SparseKB.build(docs)
+    r = BM25Retriever(kb)
+    query = docs[7][:6]
+    ids, scores = r.retrieve([query], 5)
+    cache = SparseRetrievalCache(kb, 32)
+    cache.insert(ids[0])
+    cids, cscores = cache.retrieve(query, 5)
+    np.testing.assert_allclose(cscores, scores[0], atol=1e-5)
+    assert list(cids) == list(ids[0])

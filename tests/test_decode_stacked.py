@@ -1,0 +1,59 @@
+"""The scan-rolled decode path (dry-run: decode_step_stacked) must numerically match
+the per-layer serving path (decode_step) — same params, same state contents."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models.model import build_model, layer_plan, signatures
+
+
+def _stack_state(model, flat_state):
+    """Repack a per-layer state list into the stacked layout."""
+    cfg = model.cfg
+    n_pre, period, n_rep = layer_plan(cfg)
+    prefix = tuple(flat_state[:n_pre])
+    stages = []
+    for j in range(period):
+        if n_rep == 0:
+            break
+        reps = [flat_state[n_pre + r * period + j] for r in range(n_rep)]
+        stages.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+                      if n_rep > 1 else reps[0])
+    return {"prefix": prefix, "stages": tuple(stages)}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_stacked_decode_matches_flat(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(3)
+    params = model.init(key)
+    W, B = 24, 2
+    toks = jax.random.randint(key, (B, 10), 0, cfg.vocab_size)
+    extra = None
+    if cfg.family == "audio":
+        extra = {"frames": jax.random.normal(key, (B, cfg.encoder_frames,
+                                                   cfg.d_model)) * 0.1}
+    if cfg.family == "vlm":
+        extra = {"patches": jax.random.normal(key, (B, cfg.vision_patches,
+                                                    cfg.d_model)) * 0.1}
+    # prefill through the serving path, then take ONE decode step both ways
+    last, flat_state, pos = model.prefill(params, toks, extra=extra,
+                                          window_cache=W)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    logits_flat, _ = model.decode_step(params, flat_state, tok, pos)
+
+    stacked = _stack_state(model, flat_state)
+    logits_stacked, new_stacked = model.decode_step_stacked(params, stacked,
+                                                            tok, pos)
+    # MoE: stacked (dry-run) uses capacity dispatch vs exact serving MoE — routed
+    # outputs can differ by capacity drops; compare only for non-MoE archs, but the
+    # function must still run and produce finite logits for all.
+    assert bool(jnp.isfinite(logits_stacked).all()), arch
+    if cfg.moe is None:
+        err = float(jnp.max(jnp.abs(logits_stacked - logits_flat)))
+        assert err < 2e-3, f"{arch}: stacked decode diverges by {err}"
+    # state structure round-trips
+    assert len(new_stacked["prefix"]) == layer_plan(cfg)[0]

@@ -1,0 +1,139 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs pure-jnp
+oracle (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.dense_topk import dense_topk_pallas
+
+
+@pytest.mark.parametrize("B,N,d,k", [
+    (1, 257, 32, 1), (4, 1000, 64, 8), (8, 4096, 128, 16),
+    (3, 130, 16, 4), (16, 2048, 64, 32),
+])
+def test_dense_topk_matches_ref(B, N, d, k):
+    kq, kk = jax.random.split(jax.random.PRNGKey(B * N + k))
+    q = jax.random.normal(kq, (B, d), jnp.float32)
+    kb = jax.random.normal(kk, (N, d), jnp.float32)
+    s_k, i_k = dense_topk_pallas(q, kb, k, interpret=True)
+    s_r, i_r = ref.dense_topk_ref(q, kb, k)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dense_topk_dtypes(dtype):
+    kq, kk = jax.random.split(jax.random.PRNGKey(7))
+    q = jax.random.normal(kq, (4, 64)).astype(dtype)
+    kb = jax.random.normal(kk, (512, 64)).astype(dtype)
+    s_k, i_k = dense_topk_pallas(q, kb, 8, interpret=True)
+    s_r, i_r = ref.dense_topk_ref(q, kb, 8)
+    np.testing.assert_allclose(np.asarray(s_k, np.float32),
+                               np.asarray(s_r, np.float32), atol=3e-2, rtol=3e-2)
+
+
+def test_dense_topk_block_boundary_ids():
+    """Ids crossing KB-tile boundaries must be globally correct."""
+    d, N = 8, 700
+    kb = np.zeros((N, d), np.float32)
+    hot = [3, 255, 256, 511, 512, 699]
+    for rank, idx in enumerate(hot):
+        kb[idx, 0] = 10.0 - rank
+    q = np.zeros((1, d), np.float32)
+    q[0, 0] = 1.0
+    s, i = dense_topk_pallas(jnp.asarray(q), jnp.asarray(kb), len(hot),
+                             block_n=256, interpret=True)
+    assert list(np.asarray(i[0])) == hot
+
+
+@pytest.mark.parametrize("B,H,KV,hd,W,cl", [
+    (1, 4, 4, 32, 64, 64), (2, 8, 2, 32, 300, 123), (4, 16, 8, 64, 1024, 1000),
+    (1, 8, 1, 128, 129, 57),
+])
+def test_decode_attention_matches_ref(B, H, KV, hd, W, cl):
+    ks = jax.random.split(jax.random.PRNGKey(B + W), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, W, KV, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, W, KV, hd), jnp.float32)
+    cls = jnp.asarray([cl] + [max(1, cl // 2)] * (B - 1), jnp.int32)
+    o_k = decode_attention_pallas(q, kc, vc, cls, block_w=128, interpret=True)
+    o_r = ref.decode_attention_ref(q, kc, vc, cls)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_decode_attention_masks_invalid_slots():
+    """Entries past cache_len must not influence the output."""
+    B, H, KV, hd, W = 1, 2, 2, 16, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, W, KV, hd))
+    vc = jax.random.normal(ks[2], (B, W, KV, hd))
+    cl = jnp.asarray([17], jnp.int32)
+    o1 = decode_attention_pallas(q, kc, vc, cl, block_w=32, interpret=True)
+    kc2 = kc.at[:, 17:].set(99.0)
+    vc2 = vc.at[:, 17:].set(-99.0)
+    o2 = decode_attention_pallas(q, kc2, vc2, cl, block_w=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+def test_retriever_kernel_backend_agrees_with_numpy():
+    """ExactDenseRetriever('kernel') == ExactDenseRetriever('numpy')."""
+    from repro.retrieval.encoder import ContextEncoder
+    from repro.retrieval.kb import DenseKB
+    from repro.retrieval.retrievers import ExactDenseRetriever
+    from repro.training.data import synthetic_corpus
+    docs = synthetic_corpus(400, 512)
+    enc = ContextEncoder(512, d=32)
+    kb = DenseKB.build(docs, enc)
+    r_np = ExactDenseRetriever(kb, backend="numpy")
+    r_kn = ExactDenseRetriever(kb, backend="kernel")
+    q = enc.encode_batch([d[:10] for d in docs[:3]])
+    i1, s1 = r_np.retrieve(q, 5)
+    i2, s2 = r_kn.retrieve(q, 5)
+    np.testing.assert_allclose(s1, s2, atol=1e-4)
+    assert np.array_equal(i1, i2)
+
+
+# --------------------------------------------------------------------------------------
+# prefill (flash) attention kernel
+# --------------------------------------------------------------------------------------
+from repro.kernels.prefill_attention import prefill_attention_pallas  # noqa: E402
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window,prefix", [
+    (1, 128, 4, 2, 32, True, 0, 0),
+    (2, 300, 4, 4, 16, True, 0, 0),
+    (1, 257, 8, 2, 32, True, 64, 0),
+    (1, 200, 4, 1, 32, True, 0, 37),      # prefix-LM (paligemma)
+    (2, 160, 4, 2, 32, False, 0, 0),      # bidirectional (whisper encoder)
+])
+def test_prefill_attention_matches_ref(B, S, H, KV, hd, causal, window, prefix):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    o_k = prefill_attention_pallas(q, k, v, causal=causal, window=window,
+                                   prefix_len=prefix, bq=64, bk=64,
+                                   interpret=True)
+    o_r = ref.prefill_attention_ref(q, k, v, causal=causal, window=window,
+                                    prefix_len=prefix)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_prefill_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32)).astype(jnp.bfloat16)
+    o_k = prefill_attention_pallas(q, k, v, bq=64, bk=64, interpret=True)
+    o_r = ref.prefill_attention_ref(q.astype(jnp.float32),
+                                    k.astype(jnp.float32),
+                                    v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(o_k, np.float32), np.asarray(o_r),
+                               atol=5e-2, rtol=5e-2)

@@ -1,0 +1,77 @@
+"""OS^3 scheduler: objective math (appendix A.2) + adaptive behaviour properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scheduler import OS3, expected_verified, objective
+
+
+@given(st.floats(0.0, 0.999), st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_expected_verified_formula(gamma, s):
+    """Closed form == direct expectation sum (paper A.2 derivation)."""
+    direct = sum(gamma ** i for i in range(s))
+    assert math.isclose(expected_verified(gamma, s), direct, rel_tol=1e-9)
+
+
+@given(st.floats(0.05, 0.6), st.floats(1e-4, 1e-1), st.floats(1e-4, 1e-1))
+@settings(max_examples=60, deadline=None)
+def test_async_objective_dominates_sync(gamma, a, b):
+    """Ideal async latency <= sync latency for every stride => objective >=."""
+    for s in range(1, 9):
+        assert objective(gamma, s, a, b, True) >= objective(gamma, s, a, b, False) - 1e-12
+
+
+def test_expensive_retrieval_prefers_larger_stride():
+    """Paper §A.4: EDR (b >> a) wants large s; cheap retrievers want small s."""
+    sch = OS3(max_stride=16)
+    s_cheap = sch.optimal_stride(gamma=0.6, a=1.0, b=0.01)
+    s_exp = sch.optimal_stride(gamma=0.6, a=0.01, b=1.0)
+    assert s_exp > s_cheap
+    assert s_cheap == 1
+
+
+def test_async_with_b_less_than_a_prefers_stride_1():
+    """Paper §3: with async verification and b <= a, s=1 is optimal."""
+    sch = OS3(max_stride=16, async_mode=True)
+    assert sch.optimal_stride(gamma=0.5, a=1.0, b=0.5) == 1
+
+
+def test_gamma_mle_estimation():
+    sch = OS3(window=5, gamma_max=0.9)
+    # 3 rounds of stride 4: matches 4 (full), 2 (fail), 4 (full)
+    sch.record_verification(0.1, 4, 4)
+    sch.record_verification(0.1, 4, 2)
+    sch.record_verification(0.1, 4, 4)
+    # num = 10 matches; fails = 1 round with M < s  -> 10/11
+    assert math.isclose(sch.gamma, min(10 / 11, 0.9), rel_tol=1e-9)
+
+
+def test_gamma_capped():
+    sch = OS3(window=5, gamma_max=0.6)
+    for _ in range(5):
+        sch.record_verification(0.1, 4, 4)      # perfect speculation
+    assert sch.gamma == 0.6                     # capped, no division blow-up
+
+
+def test_scheduler_adapts_stride_upward_when_accurate():
+    sch = OS3(window=5, gamma_max=0.6, max_stride=16)
+    sch.record_speculation(0.01)                # a small
+    sch.record_verification(1.0, 1, 1)          # b large, success
+    s1 = sch.stride
+    for _ in range(4):
+        sch.record_speculation(0.01)
+        sch.record_verification(1.0, sch.stride, sch.stride)
+    assert sch.stride >= s1 and sch.stride > 1
+
+
+@given(st.floats(0.0, 0.6), st.floats(1e-4, 1.0), st.floats(1e-4, 1.0),
+       st.booleans())
+@settings(max_examples=60, deadline=None)
+def test_optimal_stride_bounds(gamma, a, b, async_mode):
+    sch = OS3(max_stride=16, async_mode=async_mode)
+    s = sch.optimal_stride(gamma=gamma, a=a, b=b)
+    assert 1 <= s <= 16
