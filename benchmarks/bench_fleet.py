@@ -1,0 +1,97 @@
+"""Fleet serving benchmark: throughput and per-request latency vs concurrency.
+
+    PYTHONPATH=src python benchmarks/bench_fleet.py --retriever edr \
+        --concurrency 1,2,4 --requests 4 --max-new 32
+
+For each retriever (EDR/ADR/SR) and each concurrency level c, serves the same
+request set through a c-slot BatchedServeEngine + FleetServer and reports:
+
+  * tokens/s on the MODELED timeline (the paper's §A.1 batched-retrieval
+    latency shape — near-constant batch cost for EDR/SR, linear-with-intercept
+    for ADR). Cross-request batched verification amortizes the per-round KB
+    call across slots, so modeled throughput rises with c — steeply for
+    EDR/SR, shallowly for ADR (its per-query intercept survives batching).
+  * tokens/s on the wall clock of this (1-core) container, where batched
+    retrieval is compute-bound and the gain comes only from fewer call
+    overheads — reported alongside, as everywhere else in benchmarks/.
+  * per-request latency (the shared lockstep timeline) and KB calls per token.
+
+c = 1 uses the same fleet machinery with one slot, so the comparison isolates
+the cross-request amortization rather than engine differences.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import RaLMConfig  # noqa: E402
+from repro.launch.serve import build_stack  # noqa: E402
+from repro.serving.batched import BatchedServeEngine  # noqa: E402
+from repro.serving.fleet import FleetServer  # noqa: E402
+from repro.training.data import make_queries  # noqa: E402
+
+from common import warm_engine  # noqa: E402
+
+
+def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
+              n_docs: int, stride: int):
+    cfg, model, params, docs, enc, retr = build_stack(retr_name, n_docs=n_docs)
+    rcfg = RaLMConfig(max_new_tokens=max_new, speculation_stride=stride)
+    prompts = [(q * 12)[:48] for q in make_queries(docs, n_requests)]
+    print(f"\n== {retr_name.upper()}  ({n_docs} docs, {n_requests} requests, "
+          f"max_new={max_new}, s={stride}) ==")
+    print(f"{'conc':>4} {'tok/s (modeled)':>16} {'tok/s (wall)':>13} "
+          f"{'latency (modeled)':>18} {'kb_calls':>9} {'q/call':>7}")
+    base = None
+    rows = []
+    for c in levels:
+        eng = BatchedServeEngine(model, params, c, cache_window=512)
+        warm_engine(eng, rcfg)
+        fleet = FleetServer(eng, retr, rcfg, enc)
+        fleet.serve(prompts[:c])                 # warmup: jit + stats calibration
+        tot_an = tot_w = 0.0
+        n_tok = calls = queries = 0
+        for i in range(0, len(prompts), c):
+            fr = fleet.serve(prompts[i:i + c])
+            tot_an += fr.analytic_time
+            tot_w += fr.wall_time
+            n_tok += fr.total_tokens
+            calls += fr.kb_calls
+            queries += fr.kb_queries
+        tp_m = n_tok / max(tot_an, 1e-9)
+        tp_w = n_tok / max(tot_w, 1e-9)
+        lat = tot_an / max(-(-len(prompts) // c), 1)
+        print(f"{c:>4} {tp_m:>16.1f} {tp_w:>13.1f} {lat:>17.3f}s "
+              f"{calls:>9} {queries / max(calls, 1):>7.1f}")
+        rows.append((c, tp_m, tp_w, lat))
+        if base is None:
+            base = tp_m
+    best = max(r[1] for r in rows)
+    print(f"   modeled-throughput scaling x{best / max(base, 1e-9):.2f} "
+          f"(c={levels[0]} -> best)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retriever", default="edr",
+                    help="edr | adr | sr | all")
+    ap.add_argument("--concurrency", default="1,2,4",
+                    help="comma-separated fleet sizes")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--n-docs", type=int, default=20000)
+    ap.add_argument("--stride", type=int, default=3)
+    args = ap.parse_args()
+    levels = [int(x) for x in args.concurrency.split(",")]
+    names = ["edr", "adr", "sr"] if args.retriever == "all" else [args.retriever]
+    for name in names:
+        bench_one(name, levels, args.requests, args.max_new, args.n_docs,
+                  args.stride)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,18 @@ k generated tokens, prepend-replace the latest chunk).
 
 Output preservation: RaLMSpec.serve() produces *exactly* the token sequence of
 RaLMSeq.serve() for the same request (greedy decoding + rank-preserving cache +
-rollback-on-mismatch). tests/test_output_preservation.py asserts this for every
-retriever type; it is the paper's central claim.
+rollback-on-mismatch), and the multi-request fleet path
+(repro.serving.fleet.FleetServer) preserves it per slot at any concurrency.
+tests/test_system.py asserts the single-request claim;
+tests/test_output_preservation.py asserts the batched-engine and fleet claims for
+every retriever type. Together they guard the paper's central claim.
+
+Per-request Algorithm-1 state (the speculation cache, the async carry, the OS^3
+scheduler instance, and the latency ledger) lives in :class:`RequestState` so the
+single-request server here and the fleet server drive the *same* state machine —
+the fleet merely runs N of them in lockstep and merges their verification queries
+into one batched KB call per round (cross-request batched verification; §A.1 shows
+batched retrieval is near-constant-cost for EDR/SR, so the merged call amortizes).
 
 Latency ledger: wall-clock segments are recorded per component (G = prefill+decode,
 R = retrieval) exactly like the paper's Figure 4 decomposition. Async verification
@@ -54,6 +64,50 @@ def _chunk(doc: Sequence[int], chunk_len: int) -> tuple:
     return tuple(d + [1] * (chunk_len - len(d)))
 
 
+def first_mismatch(specs: Sequence[int], gt_ids) -> int:
+    """Index of the first speculated doc id that disagrees with the verified top-1
+    (Algorithm 1 line 9); == len(specs) when the whole stride verified."""
+    for i in range(len(specs)):
+        if int(specs[i]) != int(gt_ids[i][0]):
+            return i
+    return len(specs)
+
+
+@dataclass
+class RequestState:
+    """Per-request Algorithm-1 state, shared by the single-request server and the
+    fleet path: the speculation cache, the OS^3 scheduler instance, the async
+    carry, the analytic timeline, the result ledger, and the current round's
+    scratch (snapshots / queries / speculated ids / per-step latencies)."""
+
+    cache: object
+    os3: Optional[OS3]
+    res: ServeResult
+    analytic: float = 0.0
+    carry: Optional[tuple] = None      # (snap, query, spec_id, a_latency)
+    snaps: List = field(default_factory=list)
+    queries: List = field(default_factory=list)
+    specs: List[int] = field(default_factory=list)
+    a_times: List[float] = field(default_factory=list)
+
+    def stride(self, rcfg: RaLMConfig) -> int:
+        return self.os3.stride if self.os3 else rcfg.speculation_stride
+
+    def begin_round(self) -> None:
+        self.snaps, self.queries, self.specs, self.a_times = [], [], [], []
+        if self.carry is not None:
+            snap, q, did, a = self.carry
+            self.snaps, self.queries = [snap], [q]
+            self.specs, self.a_times = [did], [a]
+            self.carry = None
+
+    def record_step(self, snap, query, spec_id: int, a_latency: float) -> None:
+        self.snaps.append(snap)
+        self.queries.append(query)
+        self.specs.append(spec_id)
+        self.a_times.append(a_latency)
+
+
 class _ServerBase:
     def __init__(self, engine, retriever, rcfg: RaLMConfig,
                  encoder: Optional[ContextEncoder] = None, chunk_len: int = 64):
@@ -64,12 +118,15 @@ class _ServerBase:
         self.chunk_len = chunk_len
         self.sparse = isinstance(retriever, BM25Retriever)
 
-    def _query(self):
-        """Context-dependent query summarizing the current context (paper §1)."""
-        toks = self.engine.tokens
+    def _query_tokens(self, toks):
+        """Context-dependent query summarizing an explicit context (paper §1) —
+        the fleet path passes per-slot token lists through here."""
         if self.sparse:
             return list(toks[-32:])
         return self.encoder.encode(toks)
+
+    def _query(self):
+        return self._query_tokens(self.engine.tokens)
 
     def _retrieve_batch(self, queries, k: int):
         if self.sparse:
@@ -85,6 +142,32 @@ class _ServerBase:
 
     def _budget(self) -> int:
         return self.rcfg.max_new_tokens - len(self.engine.generated)
+
+    # ---- per-request state (shared with the fleet path) ----------------------------
+    def _new_cache(self):
+        if self.sparse:
+            return SparseRetrievalCache(self.retriever.kb, self.rcfg.cache_capacity)
+        return DenseRetrievalCache(self.retriever.kb.embeddings.shape[1],
+                                   self.rcfg.cache_capacity)
+
+    def _cache_insert(self, cache, ids_row):
+        ids_row = [int(i) for i in ids_row if int(i) >= 0]
+        if not ids_row:
+            return
+        if self.sparse:
+            cache.insert(ids_row)
+        else:
+            cache.insert(ids_row, self.retriever.keys_of(ids_row))
+
+    def _new_request_state(self, cache=None) -> RequestState:
+        rcfg = self.rcfg
+        os3 = OS3(window=rcfg.os3_window, gamma_max=rcfg.gamma_max,
+                  max_stride=rcfg.max_stride,
+                  async_mode=rcfg.async_verification) if rcfg.use_os3 else None
+        return RequestState(
+            cache=cache if cache is not None else self._new_cache(), os3=os3,
+            res=ServeResult(tokens=[], wall_time=0, analytic_time=0, gen_time=0,
+                            retrieval_time=0, kb_calls=0, kb_queries=0))
 
 
 class RaLMSeq(_ServerBase):
@@ -130,124 +213,88 @@ class RaLMSpec(_ServerBase):
         self._persistent = persistent_cache
         self._session_cache = None
 
-    def _new_cache(self):
-        if self.sparse:
-            return SparseRetrievalCache(self.retriever.kb, self.rcfg.cache_capacity)
-        return DenseRetrievalCache(self.retriever.kb.embeddings.shape[1],
-                                   self.rcfg.cache_capacity)
-
-    def _cache_insert(self, cache, ids_row):
-        ids_row = [int(i) for i in ids_row if int(i) >= 0]
-        if not ids_row:
-            return
-        if self.sparse:
-            cache.insert(ids_row)
-        else:
-            cache.insert(ids_row, self.retriever.keys_of(ids_row))
-
     def serve(self, prompt: Sequence[int]) -> ServeResult:
         eng, r, rcfg = self.engine, self.retriever, self.rcfg
         eng.stats.reset()
         r0c, r0q, r0t = r.stats.calls, r.stats.queries, r.stats.time
-        os3 = OS3(window=rcfg.os3_window, gamma_max=rcfg.gamma_max,
-                  max_stride=rcfg.max_stride,
-                  async_mode=rcfg.async_verification) if rcfg.use_os3 else None
-        res = ServeResult(tokens=[], wall_time=0, analytic_time=0, gen_time=0,
-                          retrieval_time=0, kb_calls=0, kb_queries=0)
+        if self._persistent and self._session_cache is None:
+            self._session_cache = self._new_cache()
+        rs = self._new_request_state(cache=self._session_cache)
+        res = rs.res
         t0 = time.perf_counter()
-        analytic = 0.0
 
         eng.start(list(prompt)[-rcfg.max_prompt_len:])
-        if self._persistent:
-            if self._session_cache is None:
-                self._session_cache = self._new_cache()
-            cache = self._session_cache
-        else:
-            cache = self._new_cache()
         # Algorithm 1 line 4: initial retrieval populates the cache (prefetched)
         q0 = self._query()
         ids0, _ = self._retrieve_batch([q0], max(rcfg.prefetch_top_k, 1))
-        analytic += r.stats.model_latency(1)
-        self._cache_insert(cache, ids0[0])
+        rs.analytic += r.stats.model_latency(1)
+        self._cache_insert(rs.cache, ids0[0])
 
-        # carried-over speculative step from async overlap
-        carry = None  # (snap, query, spec_id, a_latency)
-
-        # NB: a pending carry is an UNVERIFIED speculative stride — the loop must
-        # not exit on budget/EOS until it has been verified (and corrected if
-        # wrong), or output preservation breaks on the final stride.
-        while not self._done() or carry is not None:
-            stride = os3.stride if os3 else rcfg.speculation_stride
-            snaps, queries, specs, a_times = [], [], [], []
-            if carry is not None:
-                snaps, queries, specs, a_times = [carry[0]], [carry[1]], \
-                    [carry[2]], [carry[3]]
-                carry = None
-            while len(specs) < max(stride, 1) and not self._done():
-                snap, q, did, a = self._spec_step(cache)
-                snaps.append(snap)
-                queries.append(q)
-                specs.append(did)
-                a_times.append(a)
-                analytic += a
-                if os3:
-                    os3.record_speculation(a)
-            if not specs:
+        # NB: a pending carry (async overlap's extra speculative step) is an
+        # UNVERIFIED speculative stride — the loop must not exit on budget/EOS
+        # until it has been verified (and corrected if wrong), or output
+        # preservation breaks on the final stride.
+        while not self._done() or rs.carry is not None:
+            stride = rs.stride(rcfg)
+            rs.begin_round()
+            while len(rs.specs) < max(stride, 1) and not self._done():
+                snap, q, did, a = self._spec_step(rs.cache)
+                rs.record_step(snap, q, did, a)
+                rs.analytic += a
+                if rs.os3:
+                    rs.os3.record_speculation(a)
+            if not rs.specs:
                 break
-            res.spec_steps += len(specs)
-            res.strides.append(len(specs))
+            res.spec_steps += len(rs.specs)
+            res.strides.append(len(rs.specs))
 
             if self._pool is not None:
-                fut = self._pool.submit(self._verify, queries)
+                fut = self._pool.submit(self._verify, rs.queries)
                 # asynchronous extra speculation step (paper Figure 3) — adaptive:
                 # only speculate while verification is actually pending. When the
                 # retriever is cheaper than one speculation step (ADR), the extra
                 # step is pure downside (paper Table 4 observes exactly this: +A
                 # *hurts* ADR); waiting out the short verification costs less.
                 extra = None
-                b_est = self.retriever.stats.model_latency(len(queries))
-                a_est = sum(a_times) / max(len(a_times), 1)
+                b_est = self.retriever.stats.model_latency(len(rs.queries))
+                a_est = sum(rs.a_times) / max(len(rs.a_times), 1)
                 if (not fut.done() and b_est > 0.6 * a_est and not self._done()):
-                    extra = self._spec_step(cache)
+                    extra = self._spec_step(rs.cache)
                 gt_ids, b_lat, b_model = fut.result()
                 # analytic ideal (paper §4): the verification latency hides behind
                 # the extra speculation step — the round pays max(a_extra, b), and the
                 # extra step's own a is *not* double-counted when carried over.
-                analytic += max(extra[3], b_model) if extra is not None else b_model
+                rs.analytic += max(extra[3], b_model) if extra is not None else b_model
             else:
-                gt_ids, b_lat, b_model = self._verify(queries)
-                analytic += b_model
+                gt_ids, b_lat, b_model = self._verify(rs.queries)
+                rs.analytic += b_model
                 extra = None
 
             # cache update: top-1 or top-k (prefetch) per verified query
             for row in gt_ids:
-                self._cache_insert(cache, row[:max(rcfg.prefetch_top_k, 1)])
+                self._cache_insert(rs.cache, row[:max(rcfg.prefetch_top_k, 1)])
 
-            m = len(specs)
-            for i in range(len(specs)):
-                if int(specs[i]) != int(gt_ids[i, 0]):
-                    m = i
-                    break
-            if os3:
-                os3.record_verification(b_model, len(specs), m)
+            m = first_mismatch(rs.specs, gt_ids)
+            if rs.os3:
+                rs.os3.record_verification(b_model, len(rs.specs), m)
             res.rounds += 1
 
-            if m < len(specs):                      # mis-speculation: rollback
+            if m < len(rs.specs):                   # mis-speculation: rollback
                 res.mismatches += 1
                 extra = None                        # extra step is invalid too
-                self.engine.restore(snaps[m])
+                self.engine.restore(rs.snaps[m])
                 tc = time.perf_counter()
                 self.engine.set_doc(self._doc(gt_ids[m, 0]))
                 self.engine.gen(min(self.rcfg.generation_stride, self._budget()))
-                analytic += time.perf_counter() - tc
+                rs.analytic += time.perf_counter() - tc
             if extra is not None:
-                carry = extra
-                if os3:
-                    os3.record_speculation(extra[3])
+                rs.carry = extra
+                if rs.os3:
+                    rs.os3.record_speculation(extra[3])
 
         res.tokens = list(eng.generated)
         res.wall_time = time.perf_counter() - t0
-        res.analytic_time = analytic
+        res.analytic_time = rs.analytic
         res.gen_time = eng.stats.gen_time
         res.retrieval_time = r.stats.time - r0t
         res.kb_calls = r.stats.calls - r0c

@@ -6,6 +6,12 @@
 Builds the synthetic Wikipedia-like corpus, the chosen retriever, a reduced GPT-2-
 class host LM, and serves QA-style requests with RaLMSeq (baseline) and/or RaLMSpec,
 printing the paper-style G/R latency decomposition and the speed-up ratio.
+
+``--concurrency N`` (N > 1) switches the speculative path to the fleet: a
+BatchedServeEngine with N slots and a FleetServer that serves requests in groups
+of N, merging every slot's verification queries into one batched KB call per
+round (cross-request batched verification). Outputs stay identical to the
+sequential baseline; the driver checks this when --mode both.
 """
 from __future__ import annotations
 
@@ -22,7 +28,9 @@ from repro.retrieval.encoder import ContextEncoder
 from repro.retrieval.kb import DenseKB, SparseKB
 from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
                                         IVFRetriever)
+from repro.serving.batched import BatchedServeEngine
 from repro.serving.engine import ServeEngine
+from repro.serving.fleet import FleetServer
 from repro.training.data import make_queries, synthetic_corpus
 
 
@@ -63,6 +71,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--stride", type=int, default=3)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help=">1: serve the speculative path through the fleet "
+                         "(batched engine + cross-request batched verification)")
     args = ap.parse_args()
 
     cfg, model, params, docs, enc, retr = build_stack(
@@ -85,12 +96,31 @@ def main() -> None:
         print(f"{label:14s} wall {tot_w:7.2f}s  G {tot_g:6.2f}s  R {tot_r:6.2f}s")
         return tot_w, toks
 
+    def run_fleet(label):
+        beng = BatchedServeEngine(model, params, args.concurrency,
+                                  cache_window=512)
+        fleet = FleetServer(beng, retr, rcfg, enc)
+        tot_w = tot_an = 0.0
+        toks, n_tok = [], 0
+        for i in range(0, len(prompts), args.concurrency):
+            fr = fleet.serve(prompts[i:i + args.concurrency])
+            tot_w += fr.wall_time
+            tot_an += fr.analytic_time
+            n_tok += fr.total_tokens
+            toks.extend(r.tokens for r in fr.results)
+        print(f"{label:14s} wall {tot_w:7.2f}s  modeled {tot_an:6.2f}s  "
+              f"throughput {n_tok / max(tot_an, 1e-9):8.1f} tok/s (modeled)")
+        return tot_w, toks
+
     results = {}
     if args.mode in ("seq", "both"):
         results["seq"] = run(RaLMSeq(eng, retr, rcfg, enc), "RaLMSeq")
     if args.mode in ("spec", "both"):
         label = "RaLMSpec" + ("+" + args.variant.upper() if args.variant else "")
-        results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc), label)
+        if args.concurrency > 1:
+            results["spec"] = run_fleet(f"Fleet x{args.concurrency}")
+        else:
+            results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc), label)
     if len(results) == 2:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
         print(f"outputs identical: {same}   "

@@ -373,8 +373,11 @@ def apply_self_attention_decode(p, cfg, x, position, k_cache, v_cache, cache_len
     pos = jnp.reshape(position, (-1, 1)) * jnp.ones((B, 1), jnp.int32)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
-    if _mesh_active():
-        slot = jnp.arange(k_cache.shape[1])[None, :, None, None] == write_idx
+    if _mesh_active() or jnp.ndim(write_idx) > 0:
+        # vector write_idx (B,): per-slot ring positions (multi-request serving —
+        # each fleet slot sits at its own absolute position)
+        slot = (jnp.arange(k_cache.shape[1])[None, :, None, None]
+                == jnp.reshape(write_idx, (-1, 1, 1, 1)))
         k_cache = jnp.where(slot, k.astype(k_cache.dtype), k_cache)
         v_cache = jnp.where(slot, v.astype(v_cache.dtype), v_cache)
     else:

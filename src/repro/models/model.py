@@ -183,11 +183,12 @@ def _init_layer_state(cfg, sig: Sig, batch: int, window: int, dtype,
 
 
 def _sinusoid_at(pos, d_model: int):
-    posf = pos.astype(jnp.float32)
+    """Sinusoidal embedding at `pos` (scalar or per-slot (B,)) -> (B|1, 1, d)."""
+    posf = jnp.atleast_1d(jnp.asarray(pos, jnp.float32)).reshape(-1, 1)
     dim = jnp.arange(d_model // 2, dtype=jnp.float32)
     inv = jnp.exp(-math.log(10000.0) * dim / max(d_model // 2 - 1, 1))
     ang = posf * inv
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, None]
 
 
 # --------------------------------------------------------------------------------------
@@ -356,7 +357,9 @@ class Model:
 
     # ---- decode (serving path: per-layer list) ----------------------------------------------
     def decode_step(self, params, state: list, token: jax.Array, pos: jax.Array):
-        """token: (B,) int32; pos: scalar absolute position. -> (logits (B,V), state)."""
+        """token: (B,) int32; pos: scalar absolute position shared by the batch, or
+        per-slot (B,) positions (fleet serving: every slot decodes at its own
+        absolute position). -> (logits (B,V), state)."""
         cfg = self.cfg
         sigs = signatures(cfg)
         x = params["embed"][token][:, None]

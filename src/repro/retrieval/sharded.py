@@ -10,6 +10,7 @@ batched verification scales out linearly with chips.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from functools import partial
 
 import jax
@@ -17,6 +18,24 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.ref import dense_topk_ref
+
+# jax moved shard_map out of experimental and renamed check_rep -> check_vma;
+# support both spellings so the seed toolchain (0.4.x) and current jax run this.
+if hasattr(jax, "shard_map"):
+    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
+else:                                        # pragma: no cover - jax>=0.6 path
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def mesh_context(mesh):
+    """Context manager activating `mesh` across jax versions (set_mesh /
+    use_mesh / no-op — shard_map takes the mesh explicitly anyway)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return nullcontext()
 
 
 def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
@@ -42,13 +61,13 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
         top_g = jnp.take_along_axis(cat_g, pos, axis=1)
         return top_s, top_g
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axis, None)),
         out_specs=(P(), P()),
         # outputs are replicated by construction (all_gather + identical top_k on
         # every shard); the varying-axis inference can't see through axis_index
-        check_vma=False,
+        **{_CHECK_KW: False},
     )
     return fn(queries, kb)
 
@@ -59,6 +78,6 @@ def lower_sharded_retrieval(mesh, *, n_docs: int = 1_048_576, d: int = 256,
     q = jax.ShapeDtypeStruct((batch, d), jnp.float32)
     kb = jax.ShapeDtypeStruct((n_docs, d), jnp.float32)
     fn = partial(sharded_dense_topk, k=k, mesh=mesh, axis=axis)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(fn).lower(q, kb)
         return lowered.compile()

@@ -1,0 +1,199 @@
+"""Batched multi-request serving engine: one batch-dim decode over N slots.
+
+``BatchedServeEngine`` generalizes :class:`repro.serving.engine.ServeEngine` from
+one request to ``n_slots`` concurrent requests while keeping its exactness
+contract: every slot's token stream is *identical* to what a single-request
+engine would produce for the same prompt/doc schedule
+(tests/test_output_preservation.py asserts this token-for-token).
+
+Design (ROADMAP north star: fleet-level amortization):
+  * one batched decode state (leading batch dim over slots). A lockstep decode
+    step advances every *live* slot with a single jitted ``Model.decode_step``
+    call at per-slot absolute positions — the G-cost of a speculation stride is
+    paid once per fleet, not once per request.
+  * per-slot prefill: slot contexts differ in length, so prefill stays per-slot
+    (re-prefill on doc swap is the Ram-et-al. baseline semantics) and the
+    resulting row is scattered into the batched state. Prefill shapes live on
+    the same fixed grid as the single engine, so the jit cache is shared.
+  * per-slot snapshot/restore: JAX arrays are immutable, so a snapshot is an
+    O(1) reference to the whole batched pytree plus the slot's scalars; restore
+    writes back only that slot's row. Mis-speculation rollback in one slot
+    therefore cannot perturb sibling slots (regression-tested in
+    tests/test_output_preservation.py).
+  * slots leave a lockstep ``gen`` when they hit EOS or their own budget; a
+    masked merge commits each slot's state as of its *own* last step, so late
+    leavers keep decoding batched while early leavers stay frozen.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.serving.engine import EngineStats
+
+
+def _row_mask(mask: jax.Array, leaf: jax.Array) -> jax.Array:
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+class BatchedServeEngine:
+    """N-slot greedy engine over a Model: batched decode, per-slot lifecycle."""
+
+    def __init__(self, model: Model, params, n_slots: int, *,
+                 cache_window: int = 2048, eos_id: int = -1,
+                 extra: Optional[dict] = None):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.W = cache_window
+        self.eos_id = eos_id
+        self.extra = extra
+        self.stats = EngineStats()
+        self._decode_jit = jax.jit(
+            lambda p, st, tok, pos: model.decode_step(p, st, tok, pos))
+        self._prefill_jit = jax.jit(
+            lambda p, toks: model.prefill(p, toks, extra=extra,
+                                          window_cache=self.W))
+        # scatter one prefilled row into the batched bundle / restore one row
+        # from a snapshot bundle / commit rows by mask — all jitted once, with a
+        # traced slot index so no per-slot recompiles
+        self._scatter_jit = jax.jit(lambda cur, row, b: jax.tree.map(
+            lambda c, r: c.at[b].set(r[0]), cur, row))
+        self._restore_jit = jax.jit(lambda cur, old, b: jax.tree.map(
+            lambda c, o: c.at[b].set(o[b]), cur, old))
+        self._commit_jit = jax.jit(lambda new, com, mask: jax.tree.map(
+            lambda n, c: jnp.where(_row_mask(mask, n), n, c), new, com))
+        # per-slot bookkeeping (host side)
+        self.tokens: List[List[int]] = [[] for _ in range(n_slots)]
+        self.n_prompt = [0] * n_slots
+        self.doc: List[Tuple[int, ...]] = [()] * n_slots
+        # batched device state: (decode state, per-slot positions, last logits)
+        self._state = model.init_decode_state(n_slots, self.W)
+        self._pos = jnp.zeros((n_slots,), jnp.int32)
+        self._last_logits = jnp.zeros((n_slots, model.cfg.vocab_size), jnp.float32)
+
+    # ---- bundle helpers ---------------------------------------------------------------
+    def _bundle(self):
+        return (self._state, self._pos, self._last_logits)
+
+    def _set_bundle(self, bundle) -> None:
+        self._state, self._pos, self._last_logits = bundle
+
+    def warm(self, lengths: Sequence[int]) -> None:
+        """Precompile the prefill shape grid plus one batched decode step."""
+        for L in sorted(set(int(x) for x in lengths)):
+            toks = jnp.zeros((1, L), jnp.int32)
+            last, state, pos = self._prefill_jit(self.params, toks)
+            jax.block_until_ready(last)
+        logits, _ = self._decode_jit(self.params, self._state,
+                                     jnp.zeros((self.n_slots,), jnp.int32),
+                                     self._pos)
+        jax.block_until_ready(logits)
+
+    # ---- request lifecycle ------------------------------------------------------------
+    def start(self, slot: int, prompt: Sequence[int],
+              doc: Sequence[int] = ()) -> None:
+        self.tokens[slot] = list(prompt)
+        self.n_prompt[slot] = len(prompt)
+        self.doc[slot] = tuple(doc)
+        self._prefill_slot(slot)
+
+    def _prefill_slot(self, slot: int) -> None:
+        t0 = time.perf_counter()
+        seq = list(self.doc[slot]) + self.tokens[slot]
+        toks = jnp.asarray(np.asarray(seq, np.int32))[None]
+        last, state, pos = self._prefill_jit(self.params, toks)
+        b = jnp.int32(slot)
+        self._state = self._scatter_jit(self._state, state, b)
+        self._pos = self._pos.at[slot].set(pos)
+        self._last_logits = self._last_logits.at[slot].set(last[0])
+        jax.block_until_ready(self._last_logits)
+        self.stats.prefill_time += time.perf_counter() - t0
+        self.stats.prefills += 1
+
+    def set_doc(self, slot: int, doc: Sequence[int]) -> None:
+        """Prepend-replace the slot's retrieved chunk (re-prefill if changed)."""
+        doc = tuple(doc)
+        if doc == self.doc[slot]:
+            return
+        self.doc[slot] = doc
+        self._prefill_slot(slot)
+
+    # ---- generation -------------------------------------------------------------------
+    def gen(self, slots: Sequence[int], ks: Sequence[int]) -> List[List[int]]:
+        """Lockstep greedy decode: up to ``ks[i]`` tokens for ``slots[i]`` (each
+        slot stops at EOS or its own budget). One batched decode per step.
+        Returns the new tokens per requested slot."""
+        t0 = time.perf_counter()
+        remaining = {int(b): int(k) for b, k in zip(slots, ks)}
+        out = {int(b): [] for b in slots}
+        live = [b for b, k in remaining.items() if k > 0]
+        committed = self._bundle()
+        current = committed
+        while live:
+            state, pos, logits = current
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            eos_exits, budget_exits = [], []
+            tok_vec = np.zeros((self.n_slots,), np.int32)
+            for b in live:
+                t = int(next_tok[b])
+                out[b].append(t)
+                self.tokens[b].append(t)
+                if t == self.eos_id:
+                    eos_exits.append(b)     # EOS: no decode for this token
+                    continue
+                tok_vec[b] = t
+                remaining[b] -= 1
+                if remaining[b] <= 0:
+                    budget_exits.append(b)  # budget: commit *after* this decode
+            if eos_exits:
+                committed = self._commit_bundle(current, committed, eos_exits)
+                live = [b for b in live if b not in eos_exits]
+                if not live:
+                    break
+            logits2, state2 = self._decode_jit(
+                self.params, state, jnp.asarray(tok_vec), pos)
+            live_mask = np.zeros((self.n_slots,), bool)
+            live_mask[live] = True
+            pos2 = pos + jnp.asarray(live_mask, jnp.int32)
+            current = (state2, pos2, logits2)
+            if budget_exits:
+                committed = self._commit_bundle(current, committed, budget_exits)
+                live = [b for b in live if b not in budget_exits]
+        self._set_bundle(committed)
+        jax.block_until_ready(self._last_logits)
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decodes += sum(len(v) for v in out.values())
+        return [out[int(b)] for b in slots]
+
+    def _commit_bundle(self, current, committed, slot_list):
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slot_list] = True
+        return self._commit_jit(current, committed, jnp.asarray(mask))
+
+    # ---- per-slot views ---------------------------------------------------------------
+    def generated(self, slot: int) -> List[int]:
+        return self.tokens[slot][self.n_prompt[slot]:]
+
+    def finished(self, slot: int) -> bool:
+        g = self.generated(slot)
+        return bool(g) and g[-1] == self.eos_id
+
+    # ---- speculation support ------------------------------------------------------------
+    def snapshot(self, slot: int):
+        """O(1): references to the immutable batched bundle + the slot's scalars.
+        The bundle's row `slot` is the slot's state at snapshot time; sibling
+        rows are ignored on restore."""
+        return (len(self.tokens[slot]), self.doc[slot], self._bundle())
+
+    def restore(self, slot: int, snap) -> None:
+        n, doc, bundle = snap
+        self.tokens[slot] = self.tokens[slot][:n]
+        self.doc[slot] = doc
+        b = jnp.int32(slot)
+        self._set_bundle(self._restore_jit(self._bundle(), bundle, b))

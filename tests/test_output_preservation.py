@@ -1,0 +1,184 @@
+"""Output preservation under batched multi-request serving — the paper's central
+claim extended to the fleet path:
+
+  (a) BatchedServeEngine decodes token-for-token identically to the
+      single-request ServeEngine (same prompts, same doc schedule),
+  (b) fleet-served RaLMSpec outputs are byte-identical to per-request RaLMSeq
+      outputs for EDR/ADR/SR at concurrency >= 2, and
+  (c) mis-speculation in one fleet slot never perturbs sibling slots.
+
+Engines are module-scoped (start() resets them) so the jit caches are shared
+across tests — the fast tier pays each prefill shape once.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.ralmspec import RaLMSeq, RaLMSpec
+from repro.models.model import build_model
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
+                                        IVFRetriever)
+from repro.serving.batched import BatchedServeEngine
+from repro.serving.engine import ServeEngine
+from repro.serving.fleet import FleetServer
+from repro.training.data import make_queries, synthetic_corpus
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = reduced(get_config("ralm-gpt2-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    docs = synthetic_corpus(1500, cfg.vocab_size)
+    enc = ContextEncoder(cfg.vocab_size, d=32)
+    dkb = DenseKB.build(docs, enc)
+    skb = SparseKB.build(docs)
+    prompts = [(q * 10)[:32] for q in make_queries(docs, 3)]
+    seng = ServeEngine(model, params, cache_window=256)
+    beng = BatchedServeEngine(model, params, 3, cache_window=256)
+    return model, params, docs, enc, dkb, skb, prompts, seng, beng
+
+
+RCFG = RaLMConfig(max_new_tokens=20, speculation_stride=3)
+
+
+def _retriever(name, dkb, skb):
+    return {"edr": lambda: ExactDenseRetriever(dkb),
+            "adr": lambda: IVFRetriever(dkb, n_clusters=16, nprobe=2),
+            "sr": lambda: BM25Retriever(skb)}[name]()
+
+
+# ---------------------------------------------------------------------------------
+# (a) engine level: batched decode == single decode, token for token
+# ---------------------------------------------------------------------------------
+def test_batched_engine_matches_single(stack):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    cases = [([5, 6, 7, 8], (1, 2, 3)), ([20, 21, 22], (4, 4)),
+             ([7, 9, 30, 31, 12], ())]
+    ks = [5, 3, 7]
+    for b, (p, d) in enumerate(cases):
+        beng.start(b, p, doc=d)
+    slots = list(range(len(cases)))
+    batched = beng.gen(slots, ks)
+    for b in slots:
+        beng.set_doc(b, (9, 10, 11))     # doc swap (re-prefill) mid-stream
+    follow = beng.gen(slots, [4, 4, 4])
+    for b, (p, d) in enumerate(cases):
+        seng.start(p, doc=d)
+        assert seng.gen(ks[b]) == batched[b], f"slot {b} diverged"
+        seng.set_doc((9, 10, 11))
+        assert seng.gen(4) == follow[b], f"slot {b} diverged after doc swap"
+
+
+def test_batched_engine_eos_and_budget_exits(stack):
+    """Slots leaving a lockstep gen early (budget) must freeze exactly at their
+    own last step while siblings keep decoding."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    beng.start(0, [5, 6, 7, 8])
+    beng.start(1, [9, 10, 11])
+    a, b = beng.gen([0, 1], [2, 8])     # slot 0 exits 6 steps early
+    c, = beng.gen([0], [3])             # slot 0 must resume from its own state
+    seng.start([5, 6, 7, 8])
+    assert seng.gen(2) == a and seng.gen(3) == c
+    seng.start([9, 10, 11])
+    assert seng.gen(8) == b
+
+
+# ---------------------------------------------------------------------------------
+# (b) fleet level: fleet RaLMSpec == per-request RaLMSeq, every retriever
+# ---------------------------------------------------------------------------------
+@pytest.mark.parametrize("retr_name", ["edr", "adr", "sr"])
+def test_fleet_output_preservation(stack, retr_name):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = _retriever(retr_name, dkb, skb)
+    seq_tokens = [RaLMSeq(seng, retr, RCFG, enc).serve(p).tokens
+                  for p in prompts]
+    fr = FleetServer(beng, retr, RCFG, enc).serve(prompts)
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq_tokens[i], f"{retr_name}: slot {i} diverged"
+        assert len(r.tokens) == RCFG.max_new_tokens
+    # cross-request batched verification: ONE KB call per round (+ the initial
+    # prefetch call), regardless of concurrency
+    assert fr.kb_calls == fr.rounds + 1
+
+
+def test_fleet_variants_preserve_outputs(stack):
+    """Prefetching / OS3 must not change fleet outputs (paper Table 1, batched)."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = ExactDenseRetriever(dkb)
+    for variant in ("p", "s"):
+        rcfg = dataclasses.replace(
+            RCFG, prefetch_top_k=20 if "p" in variant else 1,
+            use_os3="s" in variant)
+        seq_tokens = [RaLMSeq(seng, retr, rcfg, enc).serve(p).tokens
+                      for p in prompts[:2]]
+        fr = FleetServer(beng, retr, rcfg, enc).serve(prompts[:2])
+        for i, r in enumerate(fr.results):
+            assert r.tokens == seq_tokens[i], f"variant {variant}: slot {i}"
+
+
+def test_single_request_async_carry_fast_guard(stack):
+    """Fast-tier guard for the async-verification carry path (the fleet ignores
+    the carry machinery, and the full variant sweep lives in the slow tier —
+    without this, a carry regression would only surface under `-m slow`).
+    Budget 17 ends mid-stride, exercising the carry-at-boundary case."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, async_verification=True, max_new_tokens=17)
+    r1 = RaLMSeq(seng, retr, rcfg, enc).serve(prompts[0])
+    r2 = RaLMSpec(seng, retr, rcfg, enc).serve(prompts[0])
+    assert r1.tokens == r2.tokens
+
+
+def test_fleet_matches_single_request_spec(stack):
+    """The fleet at concurrency 1 is the single-request algorithm: same tokens
+    as RaLMSpec."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = ExactDenseRetriever(dkb)
+    spec = RaLMSpec(seng, retr, RCFG, enc).serve(prompts[0])
+    fr = FleetServer(beng, retr, RCFG, enc).serve(prompts[:1])
+    assert fr.results[0].tokens == spec.tokens
+
+
+# ---------------------------------------------------------------------------------
+# (c) rollback isolation: one slot's mis-speculation leaves siblings untouched
+# ---------------------------------------------------------------------------------
+def test_fleet_rollback_under_mis_speculation(stack):
+    """Force heavy mis-speculation (capacity-1 cache) — every slot rolls back
+    repeatedly, outputs must still equal the sequential baseline."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, cache_capacity=1)
+    seq_tokens = [RaLMSeq(seng, retr, rcfg, enc).serve(p).tokens
+                  for p in prompts]
+    fr = FleetServer(beng, retr, rcfg, enc).serve(prompts)
+    assert sum(r.mismatches for r in fr.results) > 0, \
+        "capacity-1 cache should force mis-speculation"
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq_tokens[i], f"slot {i} perturbed by rollback"
+
+
+def test_rollback_in_one_slot_does_not_perturb_siblings(stack):
+    """Engine-level regression: snapshot/rollback on slot 0 while slot 1 holds
+    state — slot 1's tokens and continuation must be unaffected."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    beng.start(0, [5, 6, 7, 8])
+    beng.start(1, [40, 41, 42, 43])
+    beng.gen([0, 1], [3, 3])
+    sibling_before = list(beng.tokens[1])
+    snap = beng.snapshot(0)
+    beng.set_doc(0, (2, 3, 4))          # slot 0 speculates: doc swap + stride
+    beng.gen([0], [4])
+    beng.restore(0, snap)               # mis-speculation: roll slot 0 back
+    assert beng.tokens[1] == sibling_before
+    cont = beng.gen([0, 1], [3, 3])     # both resume; slot 1 as if undisturbed
+    seng.start([40, 41, 42, 43])
+    seng.gen(3)
+    assert seng.gen(3) == cont[1]
+    seng.start([5, 6, 7, 8])
+    seng.gen(3)
+    assert seng.gen(3) == cont[0]

@@ -1,10 +1,17 @@
 """End-to-end behaviour tests: the paper's central claim — RaLMSpec preserves the
-baseline's outputs exactly, across retriever types and feature variants."""
+baseline's outputs exactly, across retriever types and feature variants.
+
+Marked `slow` (run with `pytest -m slow`): the full variant sweep takes minutes.
+The fast tier keeps the same claim guarded through
+tests/test_output_preservation.py (fleet + batched-engine forms, which subsume
+the single-request path at concurrency 1)."""
 import dataclasses
 
 import jax
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import RaLMConfig, get_config, reduced
 from repro.core.knnlm import KNNLMSeq, KNNLMSpec
