@@ -1,0 +1,129 @@
+"""Continuous vs fixed-group fleet: throughput and latency vs arrival rate.
+
+    PYTHONPATH=src python benchmarks/bench_continuous.py --retriever edr \
+        --slots 4 --requests 12 --max-new 32 --rates 0,2,8
+
+For each arrival rate R (Poisson, requests per modeled second; R=0 means every
+request arrives at t=0 — the saturated regime), the same request set — with
+heterogeneous per-request token budgets, cycling short/medium/long — is served
+two ways over S engine slots:
+
+  * continuous — ContinuousFleetServer: requests are admitted into slots the
+    moment slots free up mid-flight; short requests retire early and their
+    slots immediately take queued work, so no slot idles while work waits.
+  * fixed      — FleetServer groups of S in arrival order: a group launches
+    once its last member has arrived and the previous group has drained, and
+    every member occupies its slot until the whole group finishes (idle-slot
+    waste: short requests pad out to the group's longest).
+
+Reported per scheduler: modeled tokens/s over the makespan (the §A.1
+paper-hardware batched-retrieval timeline; wall-clock alongside) and modeled
+p50/p99 request latency including queueing delay. At high arrival rate the
+queue never starves, so continuous >= fixed in modeled throughput — the gap is
+exactly the idle-slot waste the fixed grouping pays on heterogeneous lengths.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import RaLMConfig  # noqa: E402
+from repro.launch.serve import build_stack, make_arrivals  # noqa: E402
+from repro.serving.batched import BatchedServeEngine  # noqa: E402
+from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
+                                      as_requests, percentile)
+from repro.serving.fleet import FleetServer  # noqa: E402
+from repro.training.data import make_queries  # noqa: E402
+
+from common import warm_engine  # noqa: E402
+
+# long/short interleaved: arrival-order groups of S mix lengths, so fixed
+# grouping pads every short request out to a long neighbor's finish — the
+# idle-slot waste continuous batching exists to reclaim
+BUDGET_CYCLE = (1.0, 0.25, 1.0, 0.5)
+
+
+def request_budgets(n: int, max_new: int):
+    return [max(4, int(round(max_new * BUDGET_CYCLE[i % len(BUDGET_CYCLE)])))
+            for i in range(n)]
+
+
+def serve_fixed(fleet, prompts, arrivals, budgets, slots: int):
+    """Static batching on the arrival timeline: groups of `slots` in arrival
+    order; a group launches at max(prev group drain, its last arrival) and its
+    members all finish when the group does."""
+    order = sorted(range(len(prompts)), key=lambda i: (arrivals[i], i))
+    clock, lat, tokens, wall = 0.0, {}, 0, 0.0
+    for g in range(0, len(order), slots):
+        members = order[g:g + slots]
+        start = max(clock, max(arrivals[i] for i in members))
+        fr = fleet.serve([prompts[i] for i in members],
+                         max_new=[budgets[i] for i in members])
+        clock = start + fr.analytic_time
+        wall += fr.wall_time
+        tokens += fr.total_tokens
+        for i in members:
+            lat[i] = clock - arrivals[i]
+    return dict(makespan=clock, wall=wall, tokens=tokens,
+                lats=[lat[i] for i in range(len(prompts))])
+
+
+def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
+              n_docs: int, stride: int, seed: int):
+    cfg, model, params, docs, enc, retr = build_stack(retr_name, n_docs=n_docs)
+    rcfg = RaLMConfig(max_new_tokens=max_new, speculation_stride=stride)
+    prompts = [(q * 12)[:48] for q in make_queries(docs, n_requests)]
+    budgets = request_budgets(n_requests, max_new)
+    eng = BatchedServeEngine(model, params, slots, cache_window=512)
+    warm_engine(eng, rcfg)
+    cont = ContinuousFleetServer(eng, retr, rcfg, enc)
+    fleet = FleetServer(eng, retr, rcfg, enc)
+    cont.serve(as_requests(prompts[:slots]))    # warmup: jit + stats calibration
+
+    print(f"\n== {retr_name.upper()}  ({n_docs} docs, {n_requests} requests, "
+          f"{slots} slots, budgets {min(budgets)}..{max(budgets)} tok, "
+          f"s={stride}) ==")
+    print(f"{'rate':>6} {'sched':>11} {'tok/s (modeled)':>16} "
+          f"{'tok/s (wall)':>13} {'p50':>8} {'p99':>8} {'makespan':>9}")
+    for rate in rates:
+        arrivals = make_arrivals(n_requests, rate, seed=seed)
+        cr = cont.serve(as_requests(prompts, arrivals, budgets))
+        fx = serve_fixed(fleet, prompts, arrivals, budgets, slots)
+        tp_c, tp_f = cr.throughput(), fx["tokens"] / max(fx["makespan"], 1e-9)
+        tag = f"{rate:g}" if rate > 0 else "sat"
+        print(f"{tag:>6} {'continuous':>11} {tp_c:>16.1f} "
+              f"{cr.throughput(modeled=False):>13.1f} {cr.p50:>7.2f}s "
+              f"{cr.p99:>7.2f}s {cr.analytic_time:>8.2f}s")
+        print(f"{'':>6} {'fixed':>11} {tp_f:>16.1f} "
+              f"{fx['tokens'] / max(fx['wall'], 1e-9):>13.1f} "
+              f"{percentile(fx['lats'], 50):>7.2f}s "
+              f"{percentile(fx['lats'], 99):>7.2f}s {fx['makespan']:>8.2f}s")
+        print(f"{'':>6} {'':>11} continuous/fixed modeled throughput "
+              f"x{tp_c / max(tp_f, 1e-9):.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retriever", default="edr", help="edr | adr | sr | all")
+    ap.add_argument("--rates", default="0,2,8",
+                    help="comma-separated Poisson arrival rates (req per "
+                         "modeled second); 0 = all requests at t=0 (saturated)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--n-docs", type=int, default=20000)
+    ap.add_argument("--stride", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rates = [float(x) for x in args.rates.split(",")]
+    names = ["edr", "adr", "sr"] if args.retriever == "all" else [args.retriever]
+    for name in names:
+        bench_one(name, rates, args.slots, args.requests, args.max_new,
+                  args.n_docs, args.stride, args.seed)
+
+
+if __name__ == "__main__":
+    main()

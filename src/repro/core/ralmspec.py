@@ -4,18 +4,30 @@ k generated tokens, prepend-replace the latest chunk).
 
 Output preservation: RaLMSpec.serve() produces *exactly* the token sequence of
 RaLMSeq.serve() for the same request (greedy decoding + rank-preserving cache +
-rollback-on-mismatch), and the multi-request fleet path
-(repro.serving.fleet.FleetServer) preserves it per slot at any concurrency.
-tests/test_system.py asserts the single-request claim;
-tests/test_output_preservation.py asserts the batched-engine and fleet claims for
-every retriever type. Together they guard the paper's central claim.
+rollback-on-mismatch), and the multi-request fleet paths preserve it per slot:
+repro.serving.fleet.FleetServer at any fixed concurrency, and
+repro.serving.continuous.ContinuousFleetServer under continuous batching — no
+matter when a request is admitted, which slot it lands in, or what rollbacks its
+slot neighbors take. tests/test_system.py asserts the single-request claim;
+tests/test_output_preservation.py the batched-engine and fixed-fleet claims;
+tests/test_continuous.py the continuous-batching claim, each for every retriever
+type. Together they guard the paper's central claim.
 
 Per-request Algorithm-1 state (the speculation cache, the async carry, the OS^3
 scheduler instance, and the latency ledger) lives in :class:`RequestState` so the
-single-request server here and the fleet server drive the *same* state machine —
-the fleet merely runs N of them in lockstep and merges their verification queries
-into one batched KB call per round (cross-request batched verification; §A.1 shows
-batched retrieval is near-constant-cost for EDR/SR, so the merged call amortizes).
+single-request server here and BOTH fleet servers drive the *same* state machine:
+
+  * ``repro.serving.fleet.FleetServer`` runs N of them in lockstep over a fixed
+    request group,
+  * ``repro.serving.continuous.ContinuousFleetServer`` runs them over a slot
+    pool with continuous batching — requests are admitted into slots the moment
+    they free up mid-flight and retired as they finish, so ``RequestState`` also
+    carries request identity (``rid``), a per-request token budget (``max_new``),
+    and the modeled arrival/admission/finish clock.
+
+Each round, every live slot's verification queries merge into one batched KB call
+(cross-request batched verification; §A.1 shows batched retrieval is
+near-constant-cost for EDR/SR, so the merged call amortizes).
 
 Latency ledger: wall-clock segments are recorded per component (G = prefill+decode,
 R = retrieval) exactly like the paper's Figure 4 decomposition. Async verification
@@ -89,9 +101,21 @@ class RequestState:
     queries: List = field(default_factory=list)
     specs: List[int] = field(default_factory=list)
     a_times: List[float] = field(default_factory=list)
+    # continuous-batching identity + timing (repro.serving.continuous): which
+    # request this state belongs to, its own token budget, and where it sits on
+    # the modeled clock. The lockstep paths leave these at their defaults.
+    rid: int = -1                      # request id (stable across slot reuse)
+    max_new: Optional[int] = None      # per-request budget; None -> rcfg's
+    arrival: float = 0.0               # modeled time the request arrived
+    admitted: float = 0.0              # modeled time it won a slot
+    finished: float = 0.0              # modeled time it was retired
 
     def stride(self, rcfg: RaLMConfig) -> int:
         return self.os3.stride if self.os3 else rcfg.speculation_stride
+
+    def budget_limit(self, rcfg: RaLMConfig) -> int:
+        """Token budget for THIS request (per-request under continuous batching)."""
+        return self.max_new if self.max_new is not None else rcfg.max_new_tokens
 
     def begin_round(self) -> None:
         self.snaps, self.queries, self.specs, self.a_times = [], [], [], []
@@ -159,13 +183,15 @@ class _ServerBase:
         else:
             cache.insert(ids_row, self.retriever.keys_of(ids_row))
 
-    def _new_request_state(self, cache=None) -> RequestState:
+    def _new_request_state(self, cache=None, rid: int = -1,
+                           max_new: Optional[int] = None) -> RequestState:
         rcfg = self.rcfg
         os3 = OS3(window=rcfg.os3_window, gamma_max=rcfg.gamma_max,
                   max_stride=rcfg.max_stride,
                   async_mode=rcfg.async_verification) if rcfg.use_os3 else None
         return RequestState(
             cache=cache if cache is not None else self._new_cache(), os3=os3,
+            rid=rid, max_new=max_new,
             res=ServeResult(tokens=[], wall_time=0, analytic_time=0, gen_time=0,
                             retrieval_time=0, kb_calls=0, kb_queries=0))
 

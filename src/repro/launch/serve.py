@@ -12,6 +12,17 @@ BatchedServeEngine with N slots and a FleetServer that serves requests in groups
 of N, merging every slot's verification queries into one batched KB call per
 round (cross-request batched verification). Outputs stay identical to the
 sequential baseline; the driver checks this when --mode both.
+
+``--scheduler continuous`` serves through ContinuousFleetServer instead of
+fixed groups: requests sit on an arrival timeline and are admitted into engine
+slots the moment slots free up mid-flight (continuous batching). Arrivals are
+Poisson at ``--arrival-rate`` requests per modeled second (0 = everything
+arrives at t=0, the saturated regime) or trace-driven via ``--arrival-trace
+"0,0.5,1.2,..."``. ``--num-requests`` sets the request count (alias:
+``--requests``). Example:
+
+    PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \
+        --concurrency 4 --num-requests 12 --arrival-rate 2
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ from repro.retrieval.kb import DenseKB, SparseKB
 from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
                                         IVFRetriever)
 from repro.serving.batched import BatchedServeEngine
+from repro.serving.continuous import ContinuousFleetServer, as_requests
 from repro.serving.engine import ServeEngine
 from repro.serving.fleet import FleetServer
 from repro.training.data import make_queries, synthetic_corpus
@@ -61,19 +73,46 @@ def variant_config(variant: str, base: RaLMConfig) -> RaLMConfig:
     )
 
 
+def make_arrivals(n: int, rate: float, trace: str = "", seed: int = 0):
+    """Arrival times on the modeled clock: a trace beats a rate beats all-at-0.
+
+    ``trace`` is comma-separated seconds (cycled/truncated to n); ``rate`` > 0
+    draws Poisson arrivals (exponential inter-arrival gaps, rate req/s)."""
+    if trace:
+        pts = [float(x) for x in trace.split(",") if x.strip()]
+        return [pts[i % len(pts)] for i in range(n)]
+    if rate > 0:
+        gaps = np.random.default_rng(seed).exponential(1.0 / rate, size=n)
+        return np.cumsum(gaps).tolist()
+    return [0.0] * n
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--retriever", choices=["edr", "adr", "sr"], default="edr")
     ap.add_argument("--mode", choices=["seq", "spec", "both"], default="both")
     ap.add_argument("--variant", default="psa",
                     help="subset of 'psa': prefetch / OS3 scheduler / async")
-    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--requests", "--num-requests", dest="requests", type=int,
+                    default=5, help="number of requests to serve")
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--stride", type=int, default=3)
     ap.add_argument("--concurrency", type=int, default=1,
                     help=">1: serve the speculative path through the fleet "
                          "(batched engine + cross-request batched verification)")
+    ap.add_argument("--scheduler", choices=["fixed", "continuous"],
+                    default="fixed",
+                    help="fixed: groups of --concurrency in lockstep; "
+                         "continuous: admit into freed slots mid-flight")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate, requests per modeled second "
+                         "(0 = all requests arrive at t=0)")
+    ap.add_argument("--arrival-trace", default="",
+                    help="comma-separated arrival times in modeled seconds "
+                         "(overrides --arrival-rate)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for Poisson arrivals")
     args = ap.parse_args()
 
     cfg, model, params, docs, enc, retr = build_stack(
@@ -112,12 +151,28 @@ def main() -> None:
               f"throughput {n_tok / max(tot_an, 1e-9):8.1f} tok/s (modeled)")
         return tot_w, toks
 
+    def run_continuous(label):
+        beng = BatchedServeEngine(model, params, args.concurrency,
+                                  cache_window=512)
+        server = ContinuousFleetServer(beng, retr, rcfg, enc)
+        arrivals = make_arrivals(len(prompts), args.arrival_rate,
+                                 args.arrival_trace, args.seed)
+        cr = server.serve(as_requests(prompts, arrivals))
+        print(f"{label:14s} wall {cr.wall_time:7.2f}s  "
+              f"modeled makespan {cr.analytic_time:6.2f}s  "
+              f"throughput {cr.throughput():8.1f} tok/s (modeled)  "
+              f"p50 {cr.p50:.2f}s  p99 {cr.p99:.2f}s  "
+              f"peak live {cr.max_live}")
+        return cr.wall_time, [r.tokens for r in cr.results]
+
     results = {}
     if args.mode in ("seq", "both"):
         results["seq"] = run(RaLMSeq(eng, retr, rcfg, enc), "RaLMSeq")
     if args.mode in ("spec", "both"):
         label = "RaLMSpec" + ("+" + args.variant.upper() if args.variant else "")
-        if args.concurrency > 1:
+        if args.scheduler == "continuous":
+            results["spec"] = run_continuous(f"Continuous x{args.concurrency}")
+        elif args.concurrency > 1:
             results["spec"] = run_fleet(f"Fleet x{args.concurrency}")
         else:
             results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc), label)

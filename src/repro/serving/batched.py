@@ -23,6 +23,14 @@ Design (ROADMAP north star: fleet-level amortization):
   * slots leave a lockstep ``gen`` when they hit EOS or their own budget; a
     masked merge commits each slot's state as of its *own* last step, so late
     leavers keep decoding batched while early leavers stay frozen.
+  * slot lifecycle (continuous batching): ``admit(slot, prompt)`` prefills a
+    request into a free slot of the LIVE batch — the scatter touches only that
+    slot's row, so sibling slots' caches/positions are undisturbed — and
+    ``retire(slot)`` frees it again. ``gen``/``snapshot``/``restore`` operate
+    only on active slots (active-slot masking); a retired slot's device row
+    stays stale until the next admit prefills over it.
+    ContinuousFleetServer (repro.serving.continuous) drives this API to admit
+    queued requests mid-flight the moment slots free up.
 """
 from __future__ import annotations
 
@@ -72,6 +80,7 @@ class BatchedServeEngine:
         self.tokens: List[List[int]] = [[] for _ in range(n_slots)]
         self.n_prompt = [0] * n_slots
         self.doc: List[Tuple[int, ...]] = [()] * n_slots
+        self.active = [False] * n_slots
         # batched device state: (decode state, per-slot positions, last logits)
         self._state = model.init_decode_state(n_slots, self.W)
         self._pos = jnp.zeros((n_slots,), jnp.int32)
@@ -95,13 +104,40 @@ class BatchedServeEngine:
                                      self._pos)
         jax.block_until_ready(logits)
 
-    # ---- request lifecycle ------------------------------------------------------------
-    def start(self, slot: int, prompt: Sequence[int],
+    # ---- slot lifecycle ---------------------------------------------------------------
+    def admit(self, slot: int, prompt: Sequence[int],
               doc: Sequence[int] = ()) -> None:
+        """Admit a request into a FREE slot of the live batch. The per-slot
+        prefill scatters only row ``slot`` of the batched state, so sibling
+        slots keep decoding from exactly where they were — this is what lets
+        continuous batching admit mid-flight (even between a sibling's
+        snapshot and its rollback restore; tests/test_continuous.py)."""
+        assert not self.active[slot], f"admit into busy slot {slot}"
+        self.active[slot] = True
         self.tokens[slot] = list(prompt)
         self.n_prompt[slot] = len(prompt)
         self.doc[slot] = tuple(doc)
         self._prefill_slot(slot)
+
+    def retire(self, slot: int) -> None:
+        """Free a finished slot. Host bookkeeping is cleared immediately; the
+        slot's device row is left stale on purpose (the next admit's prefill
+        overwrites it), so retirement costs nothing on device."""
+        assert self.active[slot], f"retire of idle slot {slot}"
+        self.active[slot] = False
+        self.tokens[slot] = []
+        self.n_prompt[slot] = 0
+        self.doc[slot] = ()
+
+    def free_slots(self) -> List[int]:
+        return [b for b in range(self.n_slots) if not self.active[b]]
+
+    def start(self, slot: int, prompt: Sequence[int],
+              doc: Sequence[int] = ()) -> None:
+        """Fixed-group entry point: (re)start a slot — retire-if-busy + admit."""
+        if self.active[slot]:
+            self.retire(slot)
+        self.admit(slot, prompt, doc)
 
     def _prefill_slot(self, slot: int) -> None:
         t0 = time.perf_counter()
@@ -129,6 +165,8 @@ class BatchedServeEngine:
         """Lockstep greedy decode: up to ``ks[i]`` tokens for ``slots[i]`` (each
         slot stops at EOS or its own budget). One batched decode per step.
         Returns the new tokens per requested slot."""
+        assert all(self.active[int(b)] for b in slots), \
+            f"gen over idle slot(s): {[int(b) for b in slots if not self.active[int(b)]]}"
         t0 = time.perf_counter()
         remaining = {int(b): int(k) for b, k in zip(slots, ks)}
         out = {int(b): [] for b in slots}
@@ -189,9 +227,11 @@ class BatchedServeEngine:
         """O(1): references to the immutable batched bundle + the slot's scalars.
         The bundle's row `slot` is the slot's state at snapshot time; sibling
         rows are ignored on restore."""
+        assert self.active[slot], f"snapshot of idle slot {slot}"
         return (len(self.tokens[slot]), self.doc[slot], self._bundle())
 
     def restore(self, slot: int, snap) -> None:
+        assert self.active[slot], f"restore of idle slot {slot}"
         n, doc, bundle = snap
         self.tokens[slot] = self.tokens[slot][:n]
         self.doc[slot] = doc

@@ -15,17 +15,27 @@ compares against the same KB ground truth, and rollback restores only that
 slot's row of the batched state. Fleet-served outputs are byte-identical to
 per-request RaLMSeq outputs (tests/test_output_preservation.py).
 
-Async verification (the intra-request overlap thread) is intentionally not
-threaded through the fleet: cross-request batching already amortizes the
-verification latency the async carry was hiding, and a per-slot carry would
-break round lockstep. ``rcfg.async_verification`` only affects the OS^3
-objective it was enabled for; the fleet ignores the carry machinery.
+A speculation round (``_run_round``) is defined over the *currently live* slot
+set, not a fixed batch width: FleetServer.serve feeds it a fixed request group
+until every member finishes, while :class:`ContinuousFleetServer`
+(repro.serving.continuous) feeds it whatever slots hold admitted requests this
+instant — admitting queued requests into freed slots between rounds and
+retiring finished ones, so slots never idle while work is waiting. Per-request
+token budgets (``RequestState.max_new``) are honored per slot, which is what
+lets heterogeneous-length requests share a fleet without the short ones
+padding out to the longest.
+
+Async verification's per-slot carry is not used on the fleet paths:
+cross-request batching already amortizes the verification latency the async
+carry was hiding, and a per-slot carry would break the shared round clock.
+``rcfg.async_verification`` only affects the OS^3 objective it was enabled
+for; the fleet ignores the carry machinery.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from repro.configs.base import RaLMConfig
 from repro.core.ralmspec import (RequestState, ServeResult, _ServerBase,
@@ -73,122 +83,174 @@ class FleetServer(_ServerBase):
     def _budget(self):
         raise NotImplementedError("FleetServer is per-slot: use _slot_budget(b)")
 
-    def _slot_done(self, b: int) -> bool:
+    def _slot_done(self, b: int, st: RequestState) -> bool:
         return (self.engine.finished(b)
-                or len(self.engine.generated(b)) >= self.rcfg.max_new_tokens)
+                or len(self.engine.generated(b)) >= st.budget_limit(self.rcfg))
 
-    def _slot_budget(self, b: int) -> int:
-        return self.rcfg.max_new_tokens - len(self.engine.generated(b))
+    def _slot_budget(self, b: int, st: RequestState) -> int:
+        return st.budget_limit(self.rcfg) - len(self.engine.generated(b))
 
-    def serve(self, prompts: Sequence[Sequence[int]]) -> FleetResult:
+    def _extra_verification_queries(self, spec_elapsed: float) -> List:
+        """Ride-along queries appended to the round's merged verification KB
+        call. The fixed fleet has none; ContinuousFleetServer uses this to
+        pre-seed queued requests' caches without a separate KB call.
+        ``spec_elapsed`` is the round's speculation time so far — the call is
+        issued that far past the round-start clock, so requests that arrived
+        mid-round are eligible to ride it."""
+        return []
+
+    def _absorb_extra_verification(self, rows) -> None:
+        pass
+
+    def _seed_slots(self, pairs) -> float:
+        """Algorithm 1 line 4, cross-request batched: ONE KB call seeds every
+        given (slot, state) pair's cache. Returns the modeled latency of the
+        call (what the batched retrieval would cost on paper hardware)."""
+        if not pairs:
+            return 0.0
+        q0 = [self._query_tokens(self.engine.tokens[b]) for b, _ in pairs]
+        ids0, _ = self._retrieve_batch(q0, max(self.rcfg.prefetch_top_k, 1))
+        for (b, st), row in zip(pairs, ids0):
+            self._cache_insert(st.cache, row)
+            # per-slot ledger: batched KB calls the slot PARTICIPATED in (so a
+            # slot's kb_calls is comparable to single-request RaLMSpec's
+            # 1 initial + 1 per round); FleetResult.kb_calls counts the actual
+            # shared calls, so the per-slot sum exceeds it by design.
+            st.res.kb_calls += 1
+            st.res.kb_queries += 1
+        return self.retriever.stats.model_latency(len(pairs))
+
+    def _run_round(self, live: Sequence[int], states, fleet) -> tuple:
+        """One Algorithm-1 speculation round over the CURRENTLY live slot set.
+
+        ``live`` is any subset of engine slots; ``states`` maps slot id ->
+        RequestState (a list works for the fixed fleet, a dict for the
+        continuous fleet). Runs the lockstep speculation sub-steps, the ONE
+        merged verification KB call, the per-slot split, and the batched
+        correction stride for whichever slots mis-speculated. Returns
+        ``(analytic_seconds, n_participants)``; ``fleet`` only needs a
+        ``rounds`` counter (FleetResult or ContinuousResult).
+        """
         eng, r, rcfg = self.engine, self.retriever, self.rcfg
+        analytic = 0.0
+        strides = {b: max(states[b].stride(rcfg), 1) for b in live}
+        for b in live:
+            states[b].begin_round()
+
+        # ---- lockstep speculation: one batched decode per sub-step ----------
+        while True:
+            doers = [b for b in live
+                     if len(states[b].specs) < strides[b]
+                     and not self._slot_done(b, states[b])]
+            if not doers:
+                break
+            t_sub = time.perf_counter()
+            for b in doers:
+                snap = eng.snapshot(b)
+                q = self._query_tokens(eng.tokens[b])
+                ids, _ = states[b].cache.retrieve(q, 1)
+                did = int(ids[0])
+                if did >= 0:
+                    eng.set_doc(b, self._doc(did))
+                # did < 0 (cold cache) keeps the slot's previous doc;
+                # verification will correct — same as the single path.
+                states[b].record_step(snap, q, did, 0.0)
+            eng.gen(doers, [min(rcfg.generation_stride,
+                                self._slot_budget(b, states[b]))
+                            for b in doers])
+            a_sub = time.perf_counter() - t_sub
+            # the sub-step runs batched: the fleet pays it once, every
+            # participant's OS^3 sees it as its per-step a
+            analytic += a_sub
+            for b in doers:
+                states[b].a_times[-1] = a_sub
+                if states[b].os3:
+                    states[b].os3.record_speculation(a_sub)
+
+        participants = [b for b in live if states[b].specs]
+        if not participants:
+            return analytic, 0
+
+        # ---- cross-request batched verification: ONE KB call per round ------
+        # Ride-along queries (continuous batching pre-seeds queued requests'
+        # caches this way) share the same call — batched retrieval is
+        # near-constant-cost (§A.1), so they are almost free.
+        extra = self._extra_verification_queries(analytic)
+        all_queries = [q for b in participants for q in states[b].queries]
+        all_queries += list(extra)
+        gt_all, _ = self._retrieve_batch(all_queries,
+                                         max(rcfg.prefetch_top_k, 1))
+        b_model = r.stats.model_latency(len(all_queries))
+        analytic += b_model
+        fleet.rounds += 1
+        if extra:
+            self._absorb_extra_verification(gt_all[-len(extra):])
+
+        # ---- split per slot: cache update, mismatch, bookkeeping ------------
+        rollbacks = []           # slots needing a correction stride
+        off = 0
+        for b in participants:
+            st = states[b]
+            n = len(st.specs)
+            gt = gt_all[off:off + n]
+            off += n
+            for row in gt:
+                self._cache_insert(st.cache, row[:max(rcfg.prefetch_top_k, 1)])
+            m = first_mismatch(st.specs, gt)
+            if st.os3:
+                # amortized share: the batched call serves every participant
+                st.os3.record_verification(b_model / len(participants), n, m)
+            st.res.rounds += 1
+            st.res.spec_steps += n
+            st.res.strides.append(n)
+            st.res.kb_calls += 1
+            st.res.kb_queries += n
+            if m < n:
+                st.res.mismatches += 1
+                eng.restore(b, st.snaps[m])
+                eng.set_doc(b, self._doc(gt[m][0]))
+                rollbacks.append(b)
+
+        # ---- corrections: one batched generation stride for all rollbacks ---
+        if rollbacks:
+            tc = time.perf_counter()
+            eng.gen(rollbacks, [min(rcfg.generation_stride,
+                                    self._slot_budget(b, states[b]))
+                                for b in rollbacks])
+            analytic += time.perf_counter() - tc
+        return analytic, len(participants)
+
+    def serve(self, prompts: Sequence[Sequence[int]],
+              max_new: Optional[Sequence[int]] = None) -> FleetResult:
+        """Serve a fixed request group to completion. ``max_new`` optionally
+        gives per-request token budgets (default: rcfg.max_new_tokens for all —
+        the continuous path is the one that exercises heterogeneity, but the
+        fixed fleet honors budgets too so the two are benchmark-comparable)."""
+        eng, rcfg = self.engine, self.rcfg
+        r = self.retriever
         B = len(prompts)
         assert B <= eng.n_slots, f"{B} requests > {eng.n_slots} fleet slots"
         eng.stats.reset()
         r0t = r.stats.time
         r0c, r0q = r.stats.calls, r.stats.queries
-        states = [self._new_request_state() for _ in range(B)]
+        states = [self._new_request_state(
+            rid=b, max_new=max_new[b] if max_new is not None else None)
+            for b in range(B)]
         fleet = FleetResult(results=[st.res for st in states])
         t0 = time.perf_counter()
-        analytic = 0.0
 
         for b, p in enumerate(prompts):
             eng.start(b, list(p)[-rcfg.max_prompt_len:])
-        # Algorithm 1 line 4, cross-request batched: ONE initial KB call seeds
-        # every slot's cache
-        q0 = [self._query_tokens(eng.tokens[b]) for b in range(B)]
-        ids0, _ = self._retrieve_batch(q0, max(rcfg.prefetch_top_k, 1))
-        analytic += r.stats.model_latency(B)
-        for b in range(B):
-            self._cache_insert(states[b].cache, ids0[b])
-            # per-slot ledger: batched KB calls the slot PARTICIPATED in (so a
-            # slot's kb_calls is comparable to single-request RaLMSpec's
-            # 1 initial + 1 per round); FleetResult.kb_calls counts the actual
-            # shared calls, so the per-slot sum exceeds it by design.
-            states[b].res.kb_calls += 1
-            states[b].res.kb_queries += 1
+        analytic = self._seed_slots([(b, states[b]) for b in range(B)])
 
         while True:
-            live = [b for b in range(B) if not self._slot_done(b)]
+            live = [b for b in range(B) if not self._slot_done(b, states[b])]
             if not live:
                 break
-            strides = {b: max(states[b].stride(rcfg), 1) for b in live}
-            for b in live:
-                states[b].begin_round()
-
-            # ---- lockstep speculation: one batched decode per sub-step ----------
-            while True:
-                doers = [b for b in live
-                         if len(states[b].specs) < strides[b]
-                         and not self._slot_done(b)]
-                if not doers:
-                    break
-                t_sub = time.perf_counter()
-                for b in doers:
-                    snap = eng.snapshot(b)
-                    q = self._query_tokens(eng.tokens[b])
-                    ids, _ = states[b].cache.retrieve(q, 1)
-                    did = int(ids[0])
-                    if did >= 0:
-                        eng.set_doc(b, self._doc(did))
-                    # did < 0 (cold cache) keeps the slot's previous doc;
-                    # verification will correct — same as the single path.
-                    states[b].record_step(snap, q, did, 0.0)
-                eng.gen(doers, [min(rcfg.generation_stride,
-                                    self._slot_budget(b)) for b in doers])
-                a_sub = time.perf_counter() - t_sub
-                # the sub-step runs batched: the fleet pays it once, every
-                # participant's OS^3 sees it as its per-step a
-                analytic += a_sub
-                for b in doers:
-                    states[b].a_times[-1] = a_sub
-                    if states[b].os3:
-                        states[b].os3.record_speculation(a_sub)
-
-            participants = [b for b in live if states[b].specs]
-            if not participants:
+            a, n_part = self._run_round(live, states, fleet)
+            analytic += a
+            if n_part == 0:
                 break
-
-            # ---- cross-request batched verification: ONE KB call per round ------
-            all_queries = [q for b in participants for q in states[b].queries]
-            gt_all, _ = self._retrieve_batch(all_queries,
-                                             max(rcfg.prefetch_top_k, 1))
-            b_model = r.stats.model_latency(len(all_queries))
-            analytic += b_model
-            fleet.rounds += 1
-
-            # ---- split per slot: cache update, mismatch, bookkeeping ------------
-            rollbacks = []           # slots needing a correction stride
-            off = 0
-            for b in participants:
-                st = states[b]
-                n = len(st.specs)
-                gt = gt_all[off:off + n]
-                off += n
-                for row in gt:
-                    self._cache_insert(st.cache, row[:max(rcfg.prefetch_top_k, 1)])
-                m = first_mismatch(st.specs, gt)
-                if st.os3:
-                    # amortized share: the batched call serves every participant
-                    st.os3.record_verification(b_model / len(participants), n, m)
-                st.res.rounds += 1
-                st.res.spec_steps += n
-                st.res.strides.append(n)
-                st.res.kb_calls += 1
-                st.res.kb_queries += n
-                if m < n:
-                    st.res.mismatches += 1
-                    eng.restore(b, st.snaps[m])
-                    eng.set_doc(b, self._doc(gt[m][0]))
-                    rollbacks.append(b)
-
-            # ---- corrections: one batched generation stride for all rollbacks ---
-            if rollbacks:
-                tc = time.perf_counter()
-                eng.gen(rollbacks, [min(rcfg.generation_stride,
-                                        self._slot_budget(b))
-                                    for b in rollbacks])
-                analytic += time.perf_counter() - tc
 
         fleet.wall_time = time.perf_counter() - t0
         fleet.analytic_time = analytic
