@@ -12,6 +12,7 @@ benchmarks share one corpus build. Sizes are chosen so the retriever-vs-LM laten
 """
 from __future__ import annotations
 
+import json
 import os
 import pickle
 import sys
@@ -156,6 +157,26 @@ def run_requests(server, prompts, warmup: int = 1):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def add_json_arg(ap) -> None:
+    """Shared machine-readable-output flag: ``--json`` writes the benchmark's
+    results to ``BENCH_<name>.json`` at the repo root (or to an explicit
+    ``--json PATH``), so successive PRs can track the perf trajectory."""
+    ap.add_argument("--json", nargs="?", const="", default=None, metavar="PATH",
+                    help="write machine-readable results (default path: "
+                         "BENCH_<bench>.json at the repo root)")
+
+
+def write_json(bench: str, payload: dict, path: str = "") -> str:
+    """Emit ``payload`` (plus the bench name) as stable, sorted JSON."""
+    out = path or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", f"BENCH_{bench}.json"))
+    with open(out, "w") as f:
+        json.dump({"bench": bench, **payload}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+    return out
 
 
 def variant_rcfg(variant: str, **kw) -> RaLMConfig:

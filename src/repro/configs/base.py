@@ -169,6 +169,19 @@ class RaLMConfig:
     speculation_stride: int = 3       # s: spec steps per verification (fixed mode)
     use_os3: bool = False             # optimal speculation stride scheduler
     async_verification: bool = False
+    # adaptive overlap gate (single path's extra step AND the async fleet's
+    # overlapped stride): only speculate under an in-flight verification when
+    # the estimated verification latency exceeds ratio x a speculation step —
+    # +A hurts cheap retrievers (ADR, paper Table 4), so 0 disables the gate
+    # (always overlap) and a huge value disables the overlap itself.
+    async_gate_ratio: float = 0.6
+    # fleet-only: minimum overlapped sub-steps per round once the gate is
+    # open, even past the verification window. The default 0 keeps the fleet
+    # overlap strictly window-bounded (only sub-steps expected to hide under
+    # b_est run, so an overlapped round can never cost more than a sync one
+    # on the modeled timeline); tests raise it to force full-stride overlaps
+    # deterministically on stacks whose retrieval is too cheap to hide work.
+    async_min_overlap: int = 0
     prefetch_top_k: int = 1           # 1 = top-1 cache update; 20/256 = prefetching
     os3_window: int = 5               # w for gamma estimation
     gamma_max: float = 0.6

@@ -15,7 +15,13 @@ type. Together they guard the paper's central claim.
 
 Per-request Algorithm-1 state (the speculation cache, the async carry, the OS^3
 scheduler instance, and the latency ledger) lives in :class:`RequestState` so the
-single-request server here and BOTH fleet servers drive the *same* state machine:
+single-request server here and BOTH fleet servers drive the *same* state machine.
+The carry is a per-request list of speculative steps taken while a verification
+call was in flight: the single-request path carries at most one extra step
+(paper Figure 3), while the async fleet path
+(:class:`repro.serving.fleet.FleetServer` with ``async_rounds``) overlaps the
+merged verification call with the whole next lockstep stride and carries every
+overlapped step of each fully-verified slot:
 
   * ``repro.serving.fleet.FleetServer`` runs N of them in lockstep over a fixed
     request group,
@@ -63,6 +69,11 @@ class ServeResult:
     mismatches: int = 0
     spec_steps: int = 0
     strides: List[int] = field(default_factory=list)
+    # async overlap accounting: speculative steps taken while a verification
+    # call was in flight and kept (carry_steps) vs thrown away because the
+    # round they overlapped mis-speculated (carry_invalidations)
+    carry_steps: int = 0
+    carry_invalidations: int = 0
 
     @property
     def speedup_denominator(self) -> float:
@@ -96,7 +107,11 @@ class RequestState:
     os3: Optional[OS3]
     res: ServeResult
     analytic: float = 0.0
-    carry: Optional[tuple] = None      # (snap, query, spec_id, a_latency)
+    # multi-step async carry: [(snap, query, spec_id, a_latency), ...] of
+    # UNVERIFIED speculative steps taken while the previous round's
+    # verification call was in flight. The single-request path carries at most
+    # one step; the async fleet carries up to a whole overlapped stride.
+    carry: List[tuple] = field(default_factory=list)
     snaps: List = field(default_factory=list)
     queries: List = field(default_factory=list)
     specs: List[int] = field(default_factory=list)
@@ -118,12 +133,14 @@ class RequestState:
         return self.max_new if self.max_new is not None else rcfg.max_new_tokens
 
     def begin_round(self) -> None:
+        """Reset the round scratch, pre-loading any carried (already executed,
+        not yet verified) overlap steps — their latencies ride along in
+        ``a_times`` but are NOT re-charged to the analytic timeline (they were
+        paid under the previous round's ``max(a_overlap, b)``)."""
         self.snaps, self.queries, self.specs, self.a_times = [], [], [], []
-        if self.carry is not None:
-            snap, q, did, a = self.carry
-            self.snaps, self.queries = [snap], [q]
-            self.specs, self.a_times = [did], [a]
-            self.carry = None
+        for snap, q, did, a in self.carry:
+            self.record_step(snap, q, did, a)
+        self.carry = []
 
     def record_step(self, snap, query, spec_id: int, a_latency: float) -> None:
         self.snaps.append(snap)
@@ -141,6 +158,9 @@ class _ServerBase:
         self.encoder = encoder
         self.chunk_len = chunk_len
         self.sparse = isinstance(retriever, BM25Retriever)
+        # whether per-request OS^3 instances optimize the async objective;
+        # FleetServer overrides this when pipelined (async) rounds are on
+        self._os3_async = rcfg.async_verification
 
     def _query_tokens(self, toks):
         """Context-dependent query summarizing an explicit context (paper §1) —
@@ -188,7 +208,7 @@ class _ServerBase:
         rcfg = self.rcfg
         os3 = OS3(window=rcfg.os3_window, gamma_max=rcfg.gamma_max,
                   max_stride=rcfg.max_stride,
-                  async_mode=rcfg.async_verification) if rcfg.use_os3 else None
+                  async_mode=self._os3_async) if rcfg.use_os3 else None
         return RequestState(
             cache=cache if cache is not None else self._new_cache(), os3=os3,
             rid=rid, max_new=max_new,
@@ -260,7 +280,7 @@ class RaLMSpec(_ServerBase):
         # UNVERIFIED speculative stride — the loop must not exit on budget/EOS
         # until it has been verified (and corrected if wrong), or output
         # preservation breaks on the final stride.
-        while not self._done() or rs.carry is not None:
+        while not self._done() or rs.carry:
             stride = rs.stride(rcfg)
             rs.begin_round()
             while len(rs.specs) < max(stride, 1) and not self._done():
@@ -284,7 +304,8 @@ class RaLMSpec(_ServerBase):
                 extra = None
                 b_est = self.retriever.stats.model_latency(len(rs.queries))
                 a_est = sum(rs.a_times) / max(len(rs.a_times), 1)
-                if (not fut.done() and b_est > 0.6 * a_est and not self._done()):
+                if (not fut.done() and b_est > rcfg.async_gate_ratio * a_est
+                        and not self._done()):
                     extra = self._spec_step(rs.cache)
                 gt_ids, b_lat, b_model = fut.result()
                 # analytic ideal (paper §4): the verification latency hides behind
@@ -307,14 +328,17 @@ class RaLMSpec(_ServerBase):
 
             if m < len(rs.specs):                   # mis-speculation: rollback
                 res.mismatches += 1
-                extra = None                        # extra step is invalid too
+                if extra is not None:               # extra step is invalid too
+                    res.carry_invalidations += 1
+                    extra = None
                 self.engine.restore(rs.snaps[m])
                 tc = time.perf_counter()
                 self.engine.set_doc(self._doc(gt_ids[m, 0]))
                 self.engine.gen(min(self.rcfg.generation_stride, self._budget()))
                 rs.analytic += time.perf_counter() - tc
             if extra is not None:
-                rs.carry = extra
+                rs.carry = [extra]
+                res.carry_steps += 1
                 if rs.os3:
                     rs.os3.record_speculation(extra[3])
 

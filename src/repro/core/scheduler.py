@@ -58,8 +58,14 @@ class OS3:
     def record_speculation(self, latency: float) -> None:
         self._a.append(latency)
 
-    def record_verification(self, latency: float, stride: int, matched: int) -> None:
-        self._b.append(latency)
+    def record_verification(self, latency: float, stride: int, matched: int,
+                            n_participants: int = 1) -> None:
+        """Record one verification outcome. ``n_participants`` amortizes a
+        fleet round's shared batched KB call across the slots it served: each
+        slot's effective b observation is ``latency / n_participants`` (the
+        §A.1 cross-request amortization), which is the b the async objective
+        must weigh against a when the fleet pipelines rounds."""
+        self._b.append(latency / max(n_participants, 1))
         self._strides.append(stride)
         self._matches.append(matched)
         self.stride = self.optimal_stride()

@@ -23,6 +23,16 @@ arrives at t=0, the saturated regime) or trace-driven via ``--arrival-trace
 
     PYTHONPATH=src python -m repro.launch.serve --scheduler continuous \
         --concurrency 4 --num-requests 12 --arrival-rate 2
+
+``--async-fleet`` pipelines the fleet rounds (either scheduler): the merged
+verification KB call runs on a worker thread while the fleet speculates the
+next lockstep stride, with per-slot carry/invalidation — the paper's +A,
+fleet-wide. A variant containing 'a' implies it. ``--retriever-backend
+kernel`` routes EDR through the Pallas blocked top-k (`kernels/dense_topk`,
+interpret mode on CPU, Mosaic on TPU):
+
+    PYTHONPATH=src python -m repro.launch.serve --concurrency 4 \
+        --async-fleet --retriever-backend kernel --requests 4
 """
 from __future__ import annotations
 
@@ -47,12 +57,17 @@ from repro.training.data import make_queries, synthetic_corpus
 
 
 def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-medium",
-                backend: str = "numpy", seed: int = 0):
-    cfg = reduced(get_config(arch), layers=2, d_model=256)
+                backend: str = "numpy", seed: int = 0, enc_dim: int = 64,
+                d_model: int = 256):
+    """Model + corpus + retriever for the serving drivers and benchmarks.
+    ``backend='kernel'`` routes EDR through the Pallas blocked top-k
+    (interpret mode on CPU); ``enc_dim``/``d_model`` let benchmarks tune the
+    retrieval-vs-LM cost ratio (bench_async_fleet needs retrieval-heavy EDR)."""
+    cfg = reduced(get_config(arch), layers=2, d_model=d_model)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     docs = synthetic_corpus(n_docs, cfg.vocab_size)
-    enc = ContextEncoder(cfg.vocab_size, d=64)
+    enc = ContextEncoder(cfg.vocab_size, d=enc_dim)
     if retriever == "sr":
         kb = SparseKB.build(docs)
         retr = BM25Retriever(kb)
@@ -105,6 +120,15 @@ def main() -> None:
                     default="fixed",
                     help="fixed: groups of --concurrency in lockstep; "
                          "continuous: admit into freed slots mid-flight")
+    ap.add_argument("--async-fleet", action="store_true",
+                    help="pipeline fleet rounds: overlap the merged "
+                         "verification KB call with the next lockstep "
+                         "speculation stride (per-slot carry, adaptive gate; "
+                         "implied by a variant containing 'a')")
+    ap.add_argument("--retriever-backend", choices=["numpy", "kernel"],
+                    default="numpy",
+                    help="EDR scoring backend: numpy flat scan, or the "
+                         "Pallas blocked top-k kernel (interpret mode on CPU)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate, requests per modeled second "
                          "(0 = all requests arrive at t=0)")
@@ -116,7 +140,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg, model, params, docs, enc, retr = build_stack(
-        args.retriever, n_docs=args.n_docs)
+        args.retriever, n_docs=args.n_docs, backend=args.retriever_backend)
     rcfg = variant_config(args.variant.replace("-", ""),
                           RaLMConfig(max_new_tokens=args.max_new,
                                      speculation_stride=args.stride))
@@ -135,10 +159,12 @@ def main() -> None:
         print(f"{label:14s} wall {tot_w:7.2f}s  G {tot_g:6.2f}s  R {tot_r:6.2f}s")
         return tot_w, toks
 
+    async_rounds = True if args.async_fleet else None  # None: follow variant
+
     def run_fleet(label):
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
-        fleet = FleetServer(beng, retr, rcfg, enc)
+        fleet = FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds)
         tot_w = tot_an = 0.0
         toks, n_tok = [], 0
         for i in range(0, len(prompts), args.concurrency):
@@ -154,7 +180,8 @@ def main() -> None:
     def run_continuous(label):
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
-        server = ContinuousFleetServer(beng, retr, rcfg, enc)
+        server = ContinuousFleetServer(beng, retr, rcfg, enc,
+                                       async_rounds=async_rounds)
         arrivals = make_arrivals(len(prompts), args.arrival_rate,
                                  args.arrival_trace, args.seed)
         cr = server.serve(as_requests(prompts, arrivals))

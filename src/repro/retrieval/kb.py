@@ -65,17 +65,34 @@ class SparseKB:
                    docs=docs)
 
     def score(self, query_terms, sub: Optional[np.ndarray] = None) -> np.ndarray:
-        """BM25 scores of ``query_terms`` against all docs (or a subset index)."""
+        """BM25 scores of ``query_terms`` against all docs (or a subset index).
+
+        Vectorized over the query: repeated terms are deduped and unique
+        terms' tf columns come out of batched ``(T[..., None] == terms).sum(1)``
+        passes instead of a full (N, L) scan per term — term-chunked so the
+        (N, L, chunk) boolean transient stays ~32MB however long the query
+        is. Scores are bit-identical to the scalar loop: each unique term's
+        BM25 contribution is computed with the same (scalar-idf, float32-tf)
+        expression, then accumulated in the original query-occurrence order."""
         T = self.terms if sub is None else self.terms[sub]
         dl = self.doc_len if sub is None else self.doc_len[sub]
-        norm = self.k1 * (1 - self.b + self.b * dl / self.avgdl)
         scores = np.zeros(T.shape[0], np.float32)
-        for t in query_terms:
-            idf = self.idf.get(int(t))
-            if idf is None:
-                continue
-            tf = (T == int(t)).sum(1).astype(np.float32)
-            scores += idf * tf * (self.k1 + 1) / (tf + norm)
+        known = [int(t) for t in query_terms if int(t) in self.idf]
+        if not known:
+            return scores
+        uniq = list(dict.fromkeys(known))      # dedupe, first-occurrence order
+        norm = self.k1 * (1 - self.b + self.b * dl / self.avgdl)
+        contrib = {}
+        step = max(1, 32_000_000 // max(T.size, 1))
+        for i in range(0, len(uniq), step):
+            chunk = uniq[i:i + step]
+            tf_all = (T[..., None] == np.asarray(chunk, T.dtype)).sum(1) \
+                .astype(np.float32)            # (N, chunk): one pass per chunk
+            for j, t in enumerate(chunk):
+                tf = tf_all[:, j]
+                contrib[t] = self.idf[t] * tf * (self.k1 + 1) / (tf + norm)
+        for t in known:                        # same accumulation order as the
+            scores += contrib[t]               # scalar loop (float-exact)
         return scores
 
 

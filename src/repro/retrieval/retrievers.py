@@ -15,6 +15,7 @@ All retrievers expose:  retrieve(queries, k) -> (ids (B,k) int64, scores (B,k)).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import List, Optional, Tuple
 
@@ -37,6 +38,11 @@ class RetrieverStats:
 
       EDR/SR: t(B) = unit * (1 + 0.05 * (B - 1))      (near-constant total)
       ADR:    t(B) = unit * (0.55 + 0.45 * B)          (linear, large intercept)
+
+    Thread-safe: with async (pipelined) verification the fleet's worker thread
+    calls ``add`` while the main thread reads ``model_latency`` for the overlap
+    gate and the analytic timeline, so the counters and the ``_unit`` EMA are
+    guarded by a (re-entrant: add -> model_latency) lock.
     """
 
     def __init__(self, kind: str = "const"):
@@ -46,6 +52,7 @@ class RetrieverStats:
         self.time = 0.0
         self.modeled_time = 0.0
         self._unit: Optional[float] = None
+        self._lock = threading.RLock()
 
     def factor(self, B: int) -> float:
         if self.kind == "linear_intercept":
@@ -53,19 +60,23 @@ class RetrieverStats:
         return 1.0 + 0.05 * (B - 1)
 
     def add(self, n_queries: int, dt: float):
-        self.calls += 1
-        self.queries += n_queries
-        self.time += dt
-        # calibrate the unit cost from SINGLE-query calls only — on this 1-core box
-        # a batch-B matmul costs ~B x the GEMV, which would pollute the unit
-        if n_queries == 1:
-            self._unit = dt if self._unit is None else 0.8 * self._unit + 0.2 * dt
-        elif self._unit is None:
-            self._unit = dt / n_queries    # conservative bootstrap
-        self.modeled_time += self.model_latency(n_queries)
+        with self._lock:
+            self.calls += 1
+            self.queries += n_queries
+            self.time += dt
+            # calibrate the unit cost from SINGLE-query calls only — on this
+            # 1-core box a batch-B matmul costs ~B x the GEMV, which would
+            # pollute the unit
+            if n_queries == 1:
+                self._unit = (dt if self._unit is None
+                              else 0.8 * self._unit + 0.2 * dt)
+            elif self._unit is None:
+                self._unit = dt / n_queries    # conservative bootstrap
+            self.modeled_time += self.model_latency(n_queries)
 
     def model_latency(self, B: int) -> float:
-        return (self._unit or 0.0) * self.factor(B)
+        with self._lock:
+            return (self._unit or 0.0) * self.factor(B)
 
 
 class ExactDenseRetriever:
@@ -122,29 +133,72 @@ class IVFRetriever:
                     self.centroids[c] = v / max(np.linalg.norm(v), 1e-9)
         assign = np.argmax(X @ self.centroids.T, axis=1)
         self.buckets = [np.where(assign == c)[0] for c in range(n_clusters)]
+        self._build_pads()
+
+    def _build_pads(self) -> None:
+        """Fixed-shape bucket table for the vectorized probe: row c holds
+        bucket c's doc ids padded with -1 to the longest bucket, so a batch's
+        candidate sets are ONE gather ``_bucket_pad[cs]`` of shape
+        (B, nprobe, Lmax) — no per-query Python concatenation."""
+        L = max(max((len(bk) for bk in self.buckets), default=1), 1)
+        self._bucket_pad = np.full((len(self.buckets), L), -1, np.int64)
+        for c, bk in enumerate(self.buckets):
+            self._bucket_pad[c, :len(bk)] = bk
+        self._bucket_len = np.asarray([len(bk) for bk in self.buckets],
+                                      np.int64)
 
     def retrieve(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized nprobe scan: padded fixed-shape candidate gather + ONE
+        batched matmul over the whole query batch (no per-query Python loop).
+
+        Semantics match the scalar scan exactly: candidates are the probed
+        buckets' members in probe order, ties break stably by that candidate
+        order, queries whose probes come up empty fall back to the first
+        ``min(k, kb.size)`` docs, and rows with fewer than k candidates pad by
+        repeating their last real (id, score). Because the padded shape is
+        fixed by the index (nprobe x Lmax), a batched call is byte-identical
+        to the same queries issued one at a time
+        (tests/test_retrievers.py::test_batched_equals_sequential)."""
         queries = np.atleast_2d(np.asarray(queries, np.float32))
         t0 = time.perf_counter()
+        if not hasattr(self, "_bucket_pad"):   # caches built pre-vectorization
+            self._build_pads()
+        B = queries.shape[0]
         cs = np.argsort(-(queries @ self.centroids.T), axis=1)[:, :self.nprobe]
-        all_ids, all_scores = [], []
-        for qi in range(queries.shape[0]):                    # per query: the intercept
-            cand = np.concatenate([self.buckets[c] for c in cs[qi]])
-            if cand.size == 0:
-                cand = np.arange(min(k, self.kb.size))
-            s = self.kb.embeddings[cand] @ queries[qi]
-            kk = min(k, cand.size)
-            top = np.argpartition(-s, kth=kk - 1)[:kk]
-            top = top[np.argsort(-s[top], kind="stable")]
-            ids = cand[top]
-            sc = s[top]
-            if kk < k:                                        # pad
-                ids = np.pad(ids, (0, k - kk), constant_values=ids[-1])
-                sc = np.pad(sc, (0, k - kk), constant_values=sc[-1])
-            all_ids.append(ids)
-            all_scores.append(sc)
-        self.stats.add(queries.shape[0], time.perf_counter() - t0)
-        return np.stack(all_ids).astype(np.int64), np.stack(all_scores)
+        cand = self._bucket_pad[cs].reshape(B, -1)        # (B, nprobe*Lmax)
+        counts = self._bucket_len[cs].sum(1)              # real cands per row
+        F = max(min(k, self.kb.size), 1)
+        if cand.shape[1] < max(F, k):                     # room for fallback/pad
+            cand = np.pad(cand, ((0, 0), (0, max(F, k) - cand.shape[1])),
+                          constant_values=-1)
+        empty = counts == 0
+        if empty.any():                                   # fallback candidates
+            cand[empty, :F] = np.arange(F)
+            counts = np.where(empty, F, counts)
+        valid = cand >= 0
+        # batched matmul over the gathered candidates, row-chunked so the
+        # (rows, C, d) gather stays ~64MB — big-KB probes would otherwise
+        # materialize GB-scale scratch per merged verification call. np.matmul
+        # over a stacked batch is per-row deterministic, so chunking cannot
+        # change a single bit of the result.
+        C, d = cand.shape[1], self.kb.embeddings.shape[1]
+        s = np.empty((B, C), np.float32)
+        step = max(1, 16_000_000 // max(C * d, 1))
+        for i in range(0, B, step):
+            emb = self.kb.embeddings[np.maximum(cand[i:i + step], 0)]
+            s[i:i + step] = np.matmul(
+                emb, queries[i:i + step, :, None])[..., 0]
+        s = np.where(valid, s, -np.inf)                   # mask padding
+        order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+        ids = np.take_along_axis(cand, order, axis=1)
+        sc = np.take_along_axis(s, order, axis=1)
+        kk = np.minimum(counts, k)                        # real hits per row
+        fill = np.arange(k)[None, :] >= kk[:, None]       # pad: repeat last
+        last = np.maximum(kk - 1, 0)[:, None]
+        ids = np.where(fill, np.take_along_axis(ids, last, axis=1), ids)
+        sc = np.where(fill, np.take_along_axis(sc, last, axis=1), sc)
+        self.stats.add(B, time.perf_counter() - t0)
+        return ids.astype(np.int64), sc.astype(np.float32)
 
     def keys_of(self, ids) -> np.ndarray:
         return self.kb.embeddings[np.asarray(ids, np.int64)]

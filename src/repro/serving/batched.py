@@ -19,7 +19,12 @@ Design (ROADMAP north star: fleet-level amortization):
     O(1) reference to the whole batched pytree plus the slot's scalars; restore
     writes back only that slot's row. Mis-speculation rollback in one slot
     therefore cannot perturb sibling slots (regression-tested in
-    tests/test_output_preservation.py).
+    tests/test_output_preservation.py). This row-granular semantics is what
+    makes async fleet rounds' overlapped strides revocable: a snapshot taken
+    before an overlapped step can be restored a ROUND later — after siblings
+    advanced, rolled back, or (continuous batching) retired and readmitted —
+    and still rewinds exactly one slot to exactly that step
+    (tests/test_async_fleet.py).
   * slots leave a lockstep ``gen`` when they hit EOS or their own budget; a
     masked merge commits each slot's state as of its *own* last step, so late
     leavers keep decoding batched while early leavers stay frozen.
@@ -226,13 +231,22 @@ class BatchedServeEngine:
     def snapshot(self, slot: int):
         """O(1): references to the immutable batched bundle + the slot's scalars.
         The bundle's row `slot` is the slot's state at snapshot time; sibling
-        rows are ignored on restore."""
+        rows are ignored on restore — which is why a snapshot stays valid
+        across round boundaries (async overlapped strides) no matter what
+        siblings did in between."""
         assert self.active[slot], f"snapshot of idle slot {slot}"
         return (len(self.tokens[slot]), self.doc[slot], self._bundle())
 
     def restore(self, slot: int, snap) -> None:
+        """Rewind ``slot`` to a snapshot it took earlier in ITS OWN request
+        (any number of gen/set_doc/sibling-ops later, including overlapped
+        strides from async fleet rounds). The slot's token list must be an
+        extension of the snapshotted one — restoring across a retire/admit
+        would silently decode from another request's state, so fail loudly."""
         assert self.active[slot], f"restore of idle slot {slot}"
         n, doc, bundle = snap
+        assert n <= len(self.tokens[slot]), \
+            f"slot {slot}: snapshot is not from this request's lineage"
         self.tokens[slot] = self.tokens[slot][:n]
         self.doc[slot] = doc
         b = jnp.int32(slot)

@@ -119,7 +119,19 @@ class ContinuousFleetServer(FleetServer):
     in ``ContinuousResult.seed_calls``) remains only for admission waves no
     verification call could have pre-seeded: the initial wave, waves after
     the pool drains idle, and requests that arrived after the last round's
-    call was already issued."""
+    call was already issued.
+
+    Async (pipelined) rounds compose with churn: the in-flight verification
+    call lives entirely inside ``_run_round`` (submitted after stage-1
+    speculation, joined before the per-slot split), so the slot population
+    only ever mutates between rounds — ``_drain_inflight`` guards the
+    admission and retirement paths against any future caller mutating slots
+    while a call is still pending. Requests that arrive while the call is in
+    flight ride it for pre-seeding (``_extra_verification_queries`` attaches
+    their seed queries at submission time) and are admitted right after the
+    join. A slot holding an unverified overlapped stride (a pending
+    ``RequestState.carry``) cannot retire until the carry is verified —
+    otherwise a final-stride mis-speculation would escape its correction."""
 
     def serve(self, requests: Sequence[Request]) -> ContinuousResult:
         eng, r, rcfg = self.engine, self.retriever, self.rcfg
@@ -145,6 +157,11 @@ class ContinuousFleetServer(FleetServer):
                 clock = max(clock, queue[0].arrival)
 
             # ---- admit: arrived requests into free slots, mid-flight -------
+            # the slot population must never mutate under an in-flight
+            # verification call (its query offsets index the pre-admission
+            # participant list) — join it first; a no-op in the current
+            # design, where _run_round drains its own call before returning
+            self._drain_inflight()
             unseeded = []
             free = eng.free_slots()
             while queue and free and queue[0].arrival <= clock:
@@ -168,17 +185,21 @@ class ContinuousFleetServer(FleetServer):
             out.max_live = max(out.max_live, len(states))
 
             # ---- one speculation round over the currently live slot set ----
+            # slots with a pending carry hold an UNVERIFIED overlapped stride:
+            # they stay live past budget/EOS until it is verified (same rule
+            # as FleetServer.serve and the single-request loop)
             live = [b for b in sorted(states)
-                    if not self._slot_done(b, states[b])]
+                    if not self._slot_done(b, states[b]) or states[b].carry]
             if live:
                 self._clock = clock
                 a, _ = self._run_round(live, states, out)
                 clock += a
 
             # ---- retire finished slots (frees them for the next admit) -----
+            self._drain_inflight()
             for b in sorted(states):
                 st = states[b]
-                if self._slot_done(b, st):
+                if self._slot_done(b, st) and not st.carry:
                     st.finished = clock
                     st.res.tokens = list(eng.generated(b))
                     st.res.analytic_time = clock - st.arrival

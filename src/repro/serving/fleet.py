@@ -25,17 +25,35 @@ token budgets (``RequestState.max_new``) are honored per slot, which is what
 lets heterogeneous-length requests share a fleet without the short ones
 padding out to the longest.
 
-Async verification's per-slot carry is not used on the fleet paths:
-cross-request batching already amortizes the verification latency the async
-carry was hiding, and a per-slot carry would break the shared round clock.
-``rcfg.async_verification`` only affects the OS^3 objective it was enabled
-for; the fleet ignores the carry machinery.
+Async (pipelined) fleet rounds — the fleet form of the paper's +A (§4,
+Fig. 3): with ``async_rounds`` on, ``_run_round`` becomes a two-stage
+pipeline. Stage one runs the round's lockstep speculation and SUBMITS the
+merged verification KB call to a worker thread (the in-flight-verification
+handle); while that call is in flight, the fleet immediately begins round
+t+1's lockstep speculation stride from the caches (the *overlap* stride).
+When the call completes, the per-slot split runs as usual — and any
+mismatched slot has its overlapped speculation invalidated (the restore to
+its round-t snapshot rewinds the overlapped steps too; a correction stride
+follows), while fully-verified slots keep their overlapped work as a
+multi-step carry (``RequestState.carry``) that pre-fills their next round.
+Outputs stay byte-identical per slot (tests/test_async_fleet.py): overlapped
+speculation is exactly as revocable as in-round speculation.
+
+The overlap is adaptive, gated on the estimated verification latency vs a
+speculation sub-step (``rcfg.async_gate_ratio``, same rule as the
+single-request path): +A hurts cheap retrievers (ADR, paper Table 4), so
+when b_est is small the round degrades gracefully to the synchronous shape.
+On the analytic timeline an overlapped round pays the paper's ideal
+``a_stage1 + max(a_overlap, b)`` instead of ``a_stage1 + a_overlap' + b`` —
+carried steps are never re-charged. Per-slot OS^3 instances switch to the
+async objective and observe the amortized ``b / n_participants``.
 """
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import RaLMConfig
 from repro.core.ralmspec import (RequestState, ServeResult, _ServerBase,
@@ -71,7 +89,24 @@ class FleetResult:
 
 
 class FleetServer(_ServerBase):
-    """Drives N RequestStates in lockstep over a BatchedServeEngine."""
+    """Drives N RequestStates in lockstep over a BatchedServeEngine.
+
+    ``async_rounds`` pipelines the rounds (see module docstring): None (the
+    default) follows ``rcfg.async_verification`` — the fleet now honors the
+    paper's +A configuration — while True/False force it regardless of the
+    variant string. The synchronous path is byte-for-byte the previous
+    behavior."""
+
+    def __init__(self, engine, retriever, rcfg: RaLMConfig,
+                 encoder=None, chunk_len: int = 64,
+                 async_rounds: Optional[bool] = None):
+        super().__init__(engine, retriever, rcfg, encoder, chunk_len)
+        self.async_rounds = (rcfg.async_verification if async_rounds is None
+                             else async_rounds)
+        self._pool = (ThreadPoolExecutor(max_workers=1)
+                      if self.async_rounds else None)
+        self._os3_async = self.async_rounds     # fleet OS^3 objective (A.2)
+        self._inflight = None                   # in-flight verification handle
 
     # ---- per-slot predicates (fleet versions of _ServerBase._done/_budget) ---------
     # The inherited single-request forms read engine.finished/.generated, which on
@@ -102,6 +137,33 @@ class FleetServer(_ServerBase):
     def _absorb_extra_verification(self, rows) -> None:
         pass
 
+    def _drain_inflight(self) -> None:
+        """Join any in-flight verification call. ``_run_round`` always joins
+        its own call before returning, so between rounds this is a no-op —
+        but slot-population mutations (admit/retire) go through it anyway so
+        the invariant survives future reshaping of the pipeline."""
+        if self._inflight is not None:
+            fut, self._inflight = self._inflight, None
+            fut.result()
+
+    def close(self) -> None:
+        """Release the verification worker thread. Long-lived processes that
+        build servers per request group should call this (or use the server
+        as a context manager) — the pool otherwise lives until process
+        exit."""
+        try:
+            self._drain_inflight()
+        finally:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
     def _seed_slots(self, pairs) -> float:
         """Algorithm 1 line 4, cross-request batched: ONE KB call seeds every
         given (slot, state) pair's cache. Returns the modeled latency of the
@@ -120,15 +182,91 @@ class FleetServer(_ServerBase):
             st.res.kb_queries += 1
         return self.retriever.stats.model_latency(len(pairs))
 
+    def _lockstep_substep(self, doers: Sequence[int], states) -> tuple:
+        """One batched speculation sub-step over ``doers``: per-slot snapshot
+        + cache-speculated doc swap, then ONE batched generation stride.
+        Returns ``({slot: (snap, query, spec_id)}, wall_seconds)``. A spec_id
+        of -1 (cold cache) keeps the slot's previous doc; verification will
+        correct — same as the single path."""
+        eng, rcfg = self.engine, self.rcfg
+        t_sub = time.perf_counter()
+        steps = {}
+        for b in doers:
+            snap = eng.snapshot(b)
+            q = self._query_tokens(eng.tokens[b])
+            ids, _ = states[b].cache.retrieve(q, 1)
+            did = int(ids[0])
+            if did >= 0:
+                eng.set_doc(b, self._doc(did))
+            steps[b] = (snap, q, did)
+        eng.gen(doers, [min(rcfg.generation_stride,
+                            self._slot_budget(b, states[b]))
+                        for b in doers])
+        return steps, time.perf_counter() - t_sub
+
+    def _overlap_speculate(self, slots: Sequence[int], states,
+                           strides: Dict[int, int], a_est: float,
+                           b_est: float) -> tuple:
+        """Round t+1's lockstep speculation, run while round t's merged
+        verification call is in flight. Steps are recorded per slot as
+        TENTATIVE carry steps (never into the round scratch): a slot that
+        round t rolls back discards them wholesale.
+
+        The overlap is bounded by the verification window: sub-steps run only
+        while the next one is expected to still fit under ``b_est`` — those
+        steps are FREE on the analytic timeline (the round pays
+        ``max(a_overlap, b)``), so an overlapped round costs no more than a
+        synchronous one up to a_est/b_est estimation error, even when every
+        slot's overlap is later invalidated. ``rcfg.async_min_overlap`` forces that many sub-steps
+        regardless of the window (tests use it to exercise the carry paths on
+        stacks whose retrieval is too cheap to hide anything). Never
+        speculates past a slot's next stride.
+
+        Analytic accounting: overlapped sub-steps are charged at ``a_est``
+        (the round's calibrated uncontended per-step cost), NOT at their
+        measured wall — on this 1-core container the verification worker's
+        BLAS scan contends with the overlapped LM work, roughly doubling its
+        wall time, which the paper's parallel hardware would not see. This is
+        the same strategy the paper itself uses for +A's analytic ideal under
+        the GIL (§5.1); wall-clock totals report the contended truth, as
+        everywhere. Returns
+        ``({slot: [(snap, query, spec_id, a_est), ...]}, modeled_seconds)``."""
+        overlap: Dict[int, List[tuple]] = {b: [] for b in slots}
+        n_sub = 0
+        while True:
+            if (n_sub >= self.rcfg.async_min_overlap
+                    and (n_sub + 1) * a_est > b_est):
+                break                       # next step would overrun the window
+            doers = [b for b in slots
+                     if len(overlap[b]) < strides[b]
+                     and not self._slot_done(b, states[b])]
+            if not doers:
+                break
+            steps, _ = self._lockstep_substep(doers, states)
+            n_sub += 1
+            for b in doers:
+                snap, q, did = steps[b]
+                overlap[b].append((snap, q, did, a_est))
+        return {b: ov for b, ov in overlap.items() if ov}, n_sub * a_est
+
     def _run_round(self, live: Sequence[int], states, fleet) -> tuple:
         """One Algorithm-1 speculation round over the CURRENTLY live slot set.
 
         ``live`` is any subset of engine slots; ``states`` maps slot id ->
         RequestState (a list works for the fixed fleet, a dict for the
-        continuous fleet). Runs the lockstep speculation sub-steps, the ONE
-        merged verification KB call, the per-slot split, and the batched
-        correction stride for whichever slots mis-speculated. Returns
-        ``(analytic_seconds, n_participants)``; ``fleet`` only needs a
+        continuous fleet). Two-stage pipeline:
+
+          stage 1 — lockstep speculation sub-steps (carried overlap steps from
+              the previous round pre-fill each slot's scratch), then the ONE
+              merged verification KB call: submitted to the worker thread when
+              async rounds are on and the adaptive gate passes, issued inline
+              otherwise;
+          stage 2 — while the call is in flight, the next round's lockstep
+              overlap stride; then join, per-slot split, carry assignment /
+              invalidation, and the batched correction stride for whichever
+              slots mis-speculated.
+
+        Returns ``(analytic_seconds, n_participants)``; ``fleet`` only needs a
         ``rounds`` counter (FleetResult or ContinuousResult).
         """
         eng, r, rcfg = self.engine, self.retriever, self.rcfg
@@ -137,33 +275,20 @@ class FleetServer(_ServerBase):
         for b in live:
             states[b].begin_round()
 
-        # ---- lockstep speculation: one batched decode per sub-step ----------
+        # ---- stage 1: lockstep speculation, one batched decode per sub-step -
         while True:
             doers = [b for b in live
                      if len(states[b].specs) < strides[b]
                      and not self._slot_done(b, states[b])]
             if not doers:
                 break
-            t_sub = time.perf_counter()
-            for b in doers:
-                snap = eng.snapshot(b)
-                q = self._query_tokens(eng.tokens[b])
-                ids, _ = states[b].cache.retrieve(q, 1)
-                did = int(ids[0])
-                if did >= 0:
-                    eng.set_doc(b, self._doc(did))
-                # did < 0 (cold cache) keeps the slot's previous doc;
-                # verification will correct — same as the single path.
-                states[b].record_step(snap, q, did, 0.0)
-            eng.gen(doers, [min(rcfg.generation_stride,
-                                self._slot_budget(b, states[b]))
-                            for b in doers])
-            a_sub = time.perf_counter() - t_sub
+            steps, a_sub = self._lockstep_substep(doers, states)
             # the sub-step runs batched: the fleet pays it once, every
             # participant's OS^3 sees it as its per-step a
             analytic += a_sub
             for b in doers:
-                states[b].a_times[-1] = a_sub
+                snap, q, did = steps[b]
+                states[b].record_step(snap, q, did, a_sub)
                 if states[b].os3:
                     states[b].os3.record_speculation(a_sub)
 
@@ -174,19 +299,47 @@ class FleetServer(_ServerBase):
         # ---- cross-request batched verification: ONE KB call per round ------
         # Ride-along queries (continuous batching pre-seeds queued requests'
         # caches this way) share the same call — batched retrieval is
-        # near-constant-cost (§A.1), so they are almost free.
+        # near-constant-cost (§A.1), so they are almost free. With async
+        # rounds they attach to the in-flight call at submission time.
         extra = self._extra_verification_queries(analytic)
         all_queries = [q for b in participants for q in states[b].queries]
         all_queries += list(extra)
-        gt_all, _ = self._retrieve_batch(all_queries,
-                                         max(rcfg.prefetch_top_k, 1))
+        k = max(rcfg.prefetch_top_k, 1)
+
+        # adaptive overlap gate, the fleet form of the single path's rule:
+        # only pipeline when the modeled verification latency is worth hiding
+        # (ADR's cheap probes make the overlap pure downside, paper Table 4)
+        overlap: Dict[int, List[tuple]] = {}
+        overlap_a = 0.0
+        gt_all = None
+        if self._pool is not None:
+            a_all = [a for b in participants for a in states[b].a_times]
+            a_est = sum(a_all) / max(len(a_all), 1)
+            b_est = r.stats.model_latency(len(all_queries))
+            if b_est > rcfg.async_gate_ratio * a_est:
+                # ---- stage 2: overlap the call with round t+1's stride ------
+                self._inflight = self._pool.submit(
+                    self._retrieve_batch, all_queries, k)
+                try:
+                    overlap, overlap_a = self._overlap_speculate(
+                        participants, states, strides, a_est, b_est)
+                finally:
+                    # clear the handle BEFORE joining: if the worker call
+                    # raised, a still-set handle would poison _drain_inflight
+                    # and close() with the same re-raise
+                    fut, self._inflight = self._inflight, None
+                    gt_all, _ = fut.result()
+        if gt_all is None:                      # sync round (or gate closed)
+            gt_all, _ = self._retrieve_batch(all_queries, k)
         b_model = r.stats.model_latency(len(all_queries))
-        analytic += b_model
+        # analytic ideal (paper §4, fleet-wide): an overlapped round pays
+        # max(a_overlap, b) for the in-flight window; a plain round pays b.
+        analytic += max(overlap_a, b_model) if overlap_a else b_model
         fleet.rounds += 1
         if extra:
             self._absorb_extra_verification(gt_all[-len(extra):])
 
-        # ---- split per slot: cache update, mismatch, bookkeeping ------------
+        # ---- split per slot: cache update, mismatch, carry, bookkeeping -----
         rollbacks = []           # slots needing a correction stride
         off = 0
         for b in participants:
@@ -195,11 +348,12 @@ class FleetServer(_ServerBase):
             gt = gt_all[off:off + n]
             off += n
             for row in gt:
-                self._cache_insert(st.cache, row[:max(rcfg.prefetch_top_k, 1)])
+                self._cache_insert(st.cache, row[:k])
             m = first_mismatch(st.specs, gt)
             if st.os3:
                 # amortized share: the batched call serves every participant
-                st.os3.record_verification(b_model / len(participants), n, m)
+                st.os3.record_verification(b_model, n, m,
+                                           n_participants=len(participants))
             st.res.rounds += 1
             st.res.spec_steps += n
             st.res.strides.append(n)
@@ -207,9 +361,19 @@ class FleetServer(_ServerBase):
             st.res.kb_queries += n
             if m < n:
                 st.res.mismatches += 1
+                if overlap.pop(b, None):
+                    # the overlapped stride speculated past a wrong doc: the
+                    # restore below rewinds it along with steps m..n-1
+                    st.res.carry_invalidations += 1
                 eng.restore(b, st.snaps[m])
                 eng.set_doc(b, self._doc(gt[m][0]))
                 rollbacks.append(b)
+            elif b in overlap:
+                st.carry = overlap.pop(b)
+                st.res.carry_steps += len(st.carry)
+                if st.os3:
+                    for step in st.carry:
+                        st.os3.record_speculation(step[3])
 
         # ---- corrections: one batched generation stride for all rollbacks ---
         if rollbacks:
@@ -244,7 +408,13 @@ class FleetServer(_ServerBase):
         analytic = self._seed_slots([(b, states[b]) for b in range(B)])
 
         while True:
-            live = [b for b in range(B) if not self._slot_done(b, states[b])]
+            # NB: a slot with a pending carry is holding an UNVERIFIED
+            # overlapped stride — it must stay live past budget/EOS until the
+            # carry is verified (and corrected if wrong), or output
+            # preservation breaks on the final stride (same rule as the
+            # single-request loop).
+            live = [b for b in range(B)
+                    if not self._slot_done(b, states[b]) or states[b].carry]
             if not live:
                 break
             a, n_part = self._run_round(live, states, fleet)

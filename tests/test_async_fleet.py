@@ -1,0 +1,193 @@
+"""Output preservation under async (pipelined) fleet rounds — the paper's +A
+extended fleet-wide must not change a single token:
+
+  (a) async fleet == per-request RaLMSeq for EDR/ADR/SR, with the overlap
+      actually exercised (carried steps > 0 — the gate is forced open via
+      ``async_gate_ratio=0``),
+  (b) forced rollbacks (capacity-1 cache) that INVALIDATE overlapped strides
+      still preserve outputs, and the invalidations are observable
+      (``ServeResult.carry_invalidations``),
+  (c) continuous-batching churn composes with pipelined rounds: admissions
+      whose requests arrived while a verification call was in flight ride
+      that call for pre-seeding, slots with pending carries cannot retire,
+      and every request's tokens still match per-request RaLMSeq,
+  (d) the adaptive gate: a huge ratio disables the overlap (ADR-style
+      degradation to sync rounds) without changing outputs,
+  (e) the multi-step carry generalization keeps the single-request async
+      path byte-identical (budget ending mid-carry).
+
+Engines are module-scoped (serve()/start() reset them) so jit caches are
+shared across tests — the fast tier pays each prefill shape once.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.ralmspec import RaLMSeq
+from repro.models.model import build_model
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
+                                        IVFRetriever)
+from repro.serving.batched import BatchedServeEngine
+from repro.serving.continuous import ContinuousFleetServer, as_requests
+from repro.serving.engine import ServeEngine
+from repro.serving.fleet import FleetServer
+from repro.training.data import make_queries, synthetic_corpus
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = reduced(get_config("ralm-gpt2-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    docs = synthetic_corpus(1500, cfg.vocab_size)
+    enc = ContextEncoder(cfg.vocab_size, d=32)
+    dkb = DenseKB.build(docs, enc)
+    skb = SparseKB.build(docs)
+    prompts = [(q * 10)[:32] for q in make_queries(docs, 3)]
+    seng = ServeEngine(model, params, cache_window=256)
+    beng = BatchedServeEngine(model, params, 3, cache_window=256)
+    beng2 = BatchedServeEngine(model, params, 2, cache_window=256)
+    return model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2
+
+
+# gate ratio 0 opens the overlap gate every round (b_est > 0 after the seed
+# call) and min_overlap forces the overlapped sub-steps past the verification
+# window, so the carry machinery is exercised deterministically on this tiny
+# stack, whose retrieval is far too cheap to hide anything behind
+RCFG = RaLMConfig(max_new_tokens=20, speculation_stride=3,
+                  async_gate_ratio=0.0, async_min_overlap=16)
+BUDGETS = [20, 8, 14]
+
+
+def _retriever(name, dkb, skb):
+    return {"edr": lambda: ExactDenseRetriever(dkb),
+            "adr": lambda: IVFRetriever(dkb, n_clusters=16, nprobe=2),
+            "sr": lambda: BM25Retriever(skb)}[name]()
+
+
+def _seq_tokens(seng, retr, enc, rcfg, prompt, budget=None):
+    one = rcfg if budget is None else dataclasses.replace(
+        rcfg, max_new_tokens=budget)
+    return RaLMSeq(seng, retr, one, enc).serve(prompt).tokens
+
+
+# ---------------------------------------------------------------------------------
+# (a) async fleet == per-request RaLMSeq, every retriever, overlap exercised
+# ---------------------------------------------------------------------------------
+@pytest.mark.parametrize("retr_name", ["edr", "adr", "sr"])
+def test_async_fleet_output_preservation(stack, retr_name):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = _retriever(retr_name, dkb, skb)
+    seq = [_seq_tokens(seng, retr, enc, RCFG, p) for p in prompts]
+    fr = FleetServer(beng, retr, RCFG, enc, async_rounds=True).serve(prompts)
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq[i], f"{retr_name}: slot {i} diverged"
+    # the pipeline really ran: overlapped strides happened (kept or revoked)
+    assert sum(r.carry_steps + r.carry_invalidations for r in fr.results) > 0
+    # and the merge invariant survives it: ONE KB call per round (+ seed)
+    assert fr.kb_calls == fr.rounds + 1
+
+
+def test_async_fleet_matches_sync_fleet(stack):
+    """Pipelining is a latency optimization, not a decoding change: sync and
+    async fleets serve identical tokens."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    sync = FleetServer(beng, retr, RCFG, enc, async_rounds=False).serve(prompts)
+    asyn = FleetServer(beng, retr, RCFG, enc, async_rounds=True).serve(prompts)
+    assert [r.tokens for r in asyn.results] == [r.tokens for r in sync.results]
+
+
+# ---------------------------------------------------------------------------------
+# (b) rollbacks that invalidate overlapped strides
+# ---------------------------------------------------------------------------------
+def test_async_fleet_rollback_invalidates_overlap(stack):
+    """Capacity-1 cache: heavy mis-speculation while every round overlaps the
+    next stride — mismatched slots must rewind their overlapped work (the
+    invalidation path) and outputs must still equal the baseline."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, cache_capacity=1)
+    seq = [_seq_tokens(seng, retr, enc, rcfg, p) for p in prompts]
+    fr = FleetServer(beng, retr, rcfg, enc, async_rounds=True).serve(prompts)
+    assert sum(r.mismatches for r in fr.results) > 0, \
+        "capacity-1 cache should force mis-speculation"
+    assert sum(r.carry_invalidations for r in fr.results) > 0, \
+        "a rollback should have invalidated an overlapped stride"
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq[i], f"slot {i} kept invalidated overlap work"
+
+
+# ---------------------------------------------------------------------------------
+# (c) continuous batching churn composes with pipelined rounds
+# ---------------------------------------------------------------------------------
+@pytest.mark.parametrize("retr_name", ["edr", "adr", "sr"])
+def test_async_continuous_preservation_under_churn(stack, retr_name):
+    """3 requests through 2 slots with heterogeneous budgets: queueing, slot
+    reuse, and retirement all happen between pipelined rounds; arrivals with
+    small offsets land while a verification call is in flight and ride it
+    for pre-seeding. Every request must match per-request RaLMSeq."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = _retriever(retr_name, dkb, skb)
+    seq = [_seq_tokens(seng, retr, enc, RCFG, p, mn)
+           for p, mn in zip(prompts, BUDGETS)]
+    server = ContinuousFleetServer(beng2, retr, RCFG, enc, async_rounds=True)
+    cr = server.serve(as_requests(prompts, arrivals=[0, 0, 1e-4],
+                                  max_new=BUDGETS))
+    for i, r in enumerate(cr.results):
+        assert r.tokens == seq[i], f"{retr_name}: request {i} diverged"
+        assert len(r.tokens) == BUDGETS[i]
+    assert cr.kb_calls == cr.rounds + cr.seed_calls
+    assert cr.seed_calls == 1, "mid-flight arrivals should ride the call"
+
+
+def test_async_continuous_rollbacks_under_churn(stack):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, cache_capacity=1)
+    seq = [_seq_tokens(seng, retr, enc, rcfg, p, mn)
+           for p, mn in zip(prompts, BUDGETS)]
+    cr = ContinuousFleetServer(beng2, retr, rcfg, enc,
+                               async_rounds=True).serve(
+        as_requests(prompts, max_new=BUDGETS))
+    assert sum(r.mismatches for r in cr.results) > 0
+    for i, r in enumerate(cr.results):
+        assert r.tokens == seq[i], f"request {i} perturbed by churn+rollback"
+
+
+# ---------------------------------------------------------------------------------
+# (d) adaptive gate: overlap disabled -> sync behavior, same outputs
+# ---------------------------------------------------------------------------------
+def test_async_fleet_gate_closes_for_cheap_retrievers(stack):
+    """A gate ratio no measured b can clear models the ADR regime (paper
+    Table 4: +A hurts cheap retrievers): the async fleet must take ZERO
+    overlapped steps and still serve baseline-identical tokens."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, async_gate_ratio=1e12)
+    seq = [_seq_tokens(seng, retr, enc, rcfg, p) for p in prompts]
+    fr = FleetServer(beng, retr, rcfg, enc, async_rounds=True).serve(prompts)
+    assert sum(r.carry_steps + r.carry_invalidations
+               for r in fr.results) == 0, "gate should have closed"
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq[i]
+
+
+# ---------------------------------------------------------------------------------
+# (e) single-request path on the generalized multi-step carry
+# ---------------------------------------------------------------------------------
+def test_single_request_carry_budget_boundary(stack):
+    """Budget 17 ends mid-stride with a pending carry — the generalized
+    (list) carry must keep the single async path byte-identical."""
+    from repro.core.ralmspec import RaLMSpec
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, async_verification=True,
+                               max_new_tokens=17, async_gate_ratio=0.6)
+    r1 = RaLMSeq(seng, retr, rcfg, enc).serve(prompts[0])
+    r2 = RaLMSpec(seng, retr, rcfg, enc).serve(prompts[0])
+    assert r1.tokens == r2.tokens

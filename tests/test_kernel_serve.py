@@ -1,0 +1,34 @@
+"""The Pallas dense-top-k EDR backend is reachable from the serving stack
+(`--retriever-backend kernel` in repro.launch.serve) and serves the SAME
+tokens as the numpy EDR — kernel-level parity is covered by tests/test_kernels;
+this is the end-to-end guard: a short speculative serve routed through
+`kernels.dense_topk` (interpret mode on CPU) must be byte-identical."""
+import jax
+import pytest
+
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.ralmspec import RaLMSpec
+from repro.models.model import build_model
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.kb import DenseKB
+from repro.retrieval.retrievers import ExactDenseRetriever
+from repro.serving.engine import ServeEngine
+from repro.training.data import make_queries, synthetic_corpus
+
+
+def test_kernel_backend_serve_parity():
+    cfg = reduced(get_config("ralm-gpt2-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    docs = synthetic_corpus(500, cfg.vocab_size)
+    enc = ContextEncoder(cfg.vocab_size, d=32)
+    kb = DenseKB.build(docs, enc)
+    rcfg = RaLMConfig(max_new_tokens=12, speculation_stride=3)
+    prompt = [(q * 10)[:32] for q in make_queries(docs, 1)][0]
+    eng = ServeEngine(model, params, cache_window=256)
+    r_np = RaLMSpec(eng, ExactDenseRetriever(kb), rcfg, enc).serve(prompt)
+    r_kr = RaLMSpec(eng, ExactDenseRetriever(kb, backend="kernel"),
+                    rcfg, enc).serve(prompt)
+    assert r_kr.tokens == r_np.tokens, \
+        "kernel-backend EDR changed served tokens"
+    assert len(r_kr.tokens) == rcfg.max_new_tokens

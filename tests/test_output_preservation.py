@@ -122,9 +122,10 @@ def test_fleet_variants_preserve_outputs(stack):
 
 
 def test_single_request_async_carry_fast_guard(stack):
-    """Fast-tier guard for the async-verification carry path (the fleet ignores
-    the carry machinery, and the full variant sweep lives in the slow tier —
-    without this, a carry regression would only surface under `-m slow`).
+    """Fast-tier guard for the single-request async-verification carry path
+    (the full variant sweep lives in the slow tier — without this, a carry
+    regression would only surface under `-m slow`; the fleet's multi-step
+    carry has its own fast guards in tests/test_async_fleet.py).
     Budget 17 ends mid-stride, exercising the carry-at-boundary case."""
     model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
     retr = ExactDenseRetriever(dkb)

@@ -62,7 +62,7 @@ def test_bm25_ranks_term_matches_first(corpus):
     assert len(top_doc & set(query)) >= 1
 
 
-@pytest.mark.parametrize("which", ["edr", "sr"])
+@pytest.mark.parametrize("which", ["edr", "adr", "sr"])
 def test_batched_equals_sequential(corpus, which):
     docs, enc, dkb, skb = corpus
     if which == "edr":
@@ -72,6 +72,16 @@ def test_batched_equals_sequential(corpus, which):
         for i, q in enumerate(qs):
             si, ss = r.retrieve(q[None], 4)
             assert list(si[0]) == list(bi[i])
+    elif which == "adr":
+        # the vectorized probe's padded shape is fixed by the index, so a
+        # batched call is byte-identical (ids AND scores) to one-at-a-time
+        r = IVFRetriever(dkb, n_clusters=32, nprobe=4)
+        qs = [enc.encode(d[:10]) for d in docs[:8]]
+        bi, bs = r.retrieve(np.stack(qs), 4)
+        for i, q in enumerate(qs):
+            si, ss = r.retrieve(q[None], 4)
+            assert list(si[0]) == list(bi[i])
+            assert np.array_equal(ss[0], bs[i])
     else:
         r = BM25Retriever(skb)
         qs = [d[:6] for d in docs[:8]]
@@ -79,6 +89,99 @@ def test_batched_equals_sequential(corpus, which):
         for i, q in enumerate(qs):
             si, ss = r.retrieve([q], 4)
             assert list(si[0]) == list(bi[i])
+
+
+def _ivf_reference_loop(r, queries, k):
+    """The pre-vectorization IVFRetriever.retrieve: per-query candidate
+    concatenation + GEMV + partial sort, kept as the parity oracle."""
+    queries = np.atleast_2d(np.asarray(queries, np.float32))
+    cs = np.argsort(-(queries @ r.centroids.T), axis=1)[:, :r.nprobe]
+    all_ids, all_scores = [], []
+    for qi in range(queries.shape[0]):
+        cand = np.concatenate([r.buckets[c] for c in cs[qi]])
+        if cand.size == 0:
+            cand = np.arange(min(k, r.kb.size))
+        s = r.kb.embeddings[cand] @ queries[qi]
+        kk = min(k, cand.size)
+        top = np.argpartition(-s, kth=kk - 1)[:kk]
+        top = top[np.argsort(-s[top], kind="stable")]
+        ids = cand[top]
+        sc = s[top]
+        if kk < k:
+            ids = np.pad(ids, (0, k - kk), constant_values=ids[-1])
+            sc = np.pad(sc, (0, k - kk), constant_values=sc[-1])
+        all_ids.append(ids)
+        all_scores.append(sc)
+    return np.stack(all_ids).astype(np.int64), np.stack(all_scores)
+
+
+@pytest.mark.parametrize("k", [1, 5, 40])
+def test_ivf_vectorized_matches_reference_loop(corpus, k):
+    """The vectorized probe (padded gather + batched matmul) returns the
+    reference loop's exact ids — including padding semantics for rows with
+    fewer than k candidates — and its scores to BLAS-kernel precision (the
+    batched matmul and the per-query GEMV may round differently in the last
+    ulp; tie order within equal scores is canonical in both)."""
+    docs, enc, dkb, _ = corpus
+    for nprobe in (1, 4):
+        r = IVFRetriever(dkb, n_clusters=64, nprobe=nprobe)
+        qs = enc.encode_batch([d[:10] for d in docs[:32]])
+        vi, vs = r.retrieve(qs, k)
+        ri, rs = _ivf_reference_loop(r, qs, k)
+        assert vi.shape == (32, k) and vs.dtype == np.float32
+        assert np.array_equal(vi, ri), f"nprobe={nprobe}: ids diverged"
+        np.testing.assert_allclose(vs, rs, atol=1e-5)
+
+
+def test_sparse_score_dedupes_repeated_terms(corpus):
+    """SparseKB.score computes every unique term's tf column in one pass but
+    must stay float-exact with the per-occurrence scalar loop — including
+    repeated query terms (each occurrence contributes once, in order) and
+    unknown terms (skipped)."""
+    docs, _, _, skb = corpus
+    rng = np.random.default_rng(7)
+    for trial in range(10):
+        q = rng.integers(0, 1100, size=int(rng.integers(1, 30))).tolist()
+        q = q + q[: max(1, len(q) // 2)] + [10 ** 9]   # repeats + unknown
+        T, dl = skb.terms, skb.doc_len
+        norm = skb.k1 * (1 - skb.b + skb.b * dl / skb.avgdl)
+        want = np.zeros(T.shape[0], np.float32)
+        for t in q:
+            idf = skb.idf.get(int(t))
+            if idf is None:
+                continue
+            tf = (T == int(t)).sum(1).astype(np.float32)
+            want += idf * tf * (skb.k1 + 1) / (tf + norm)
+        got = skb.score(q)
+        assert np.array_equal(got, want), f"trial {trial} diverged"
+
+
+def test_retriever_stats_thread_safe(corpus):
+    """With async fleet rounds the worker thread calls stats.add while the
+    main thread reads model_latency — hammer both concurrently and check the
+    counters never tear."""
+    import threading
+    from repro.retrieval.retrievers import RetrieverStats
+    stats = RetrieverStats("const")
+    N, T = 500, 4
+
+    def writer():
+        for _ in range(N):
+            stats.add(1, 1e-3)
+
+    def reader():
+        for _ in range(N):
+            assert stats.model_latency(8) >= 0.0
+
+    threads = [threading.Thread(target=writer) for _ in range(T)] + \
+              [threading.Thread(target=reader) for _ in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats.calls == N * T and stats.queries == N * T
+    assert abs(stats.time - N * T * 1e-3) < 1e-6
+    assert abs(stats.model_latency(1) - 1e-3) < 1e-9
 
 
 def test_knn_datastore_consecutive_entries(corpus):
