@@ -1,0 +1,119 @@
+"""Backend scan latency: flat numpy vs Pallas kernel vs sharded mesh.
+
+    PYTHONPATH=src python benchmarks/bench_backends.py --json
+
+Sweeps the dense top-k scan — the verification hot spot every serving path
+funnels into — across KB size and query batch for each execution backend in
+`repro.retrieval.backends`. What the cells show:
+
+  * flat    — single-host BLAS matmul + canonical argpartition top-k; latency
+              streams the whole (N, d) matrix per call.
+  * kernel  — the Pallas blocked top-k. On TPU this is the fused MXU scan; on
+              CPU the kernel body only runs under the (slow, semantics-only)
+              interpreter, so off-TPU the bench routes it through the jnp
+              oracle (`force_ref`) by default — same program shape, honest
+              wall numbers (`--kernel-interpret` forces the interpreter).
+  * sharded — the KB sharded over the visible devices (`--mesh-shards`, on
+              CPU forcing a simulated multi-device host platform): per-shard
+              scan + ONE all-gather per call. On a single physical core the
+              shards time-slice, so expect parity, not speed-up — the point
+              on this box is that the collective program is the same one a
+              real mesh runs, and its latency is one scan + O(shards*B*k)
+              collective volume.
+
+Per cell: median seconds over --repeats (first call per shape excluded — it
+pays the XLA compile), and µs/query. ``--json`` emits BENCH_backends.json via
+the shared benchmarks/common.py flag.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.retrieval.backends import bootstrap_mesh_shards  # noqa: E402
+
+bootstrap_mesh_shards()                 # before common.py imports jax
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from common import add_json_arg, write_json  # noqa: E402
+
+
+def _timed(backend, qs, k, repeats):
+    backend.search(qs, k)               # warm: jit compile for this shape
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        backend.search(qs, k)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret):
+    import jax
+
+    from repro.retrieval.backends import make_backend
+    rng = np.random.default_rng(0)
+    on_tpu = jax.default_backend() == "tpu"
+    force_ref = not on_tpu and not kernel_interpret
+    rows = []
+    built_shards = None                 # what ShardedBackend actually ran with
+    print(f"{'backend':8s} {'n_docs':>8s} {'batch':>6s} {'seconds':>10s} "
+          f"{'us/query':>10s}")
+    for n in kb_sizes:
+        emb = rng.standard_normal((n, dim)).astype(np.float32)
+        emb /= np.linalg.norm(emb, axis=1, keepdims=True)
+        backends = [
+            make_backend("numpy", emb),
+            make_backend("kernel", emb, force_ref=force_ref),
+            make_backend("sharded", emb, n_shards=mesh_shards or None),
+        ]
+        built_shards = backends[-1].n_shards    # may be < --mesh-shards
+        for B in batches:
+            qs = rng.standard_normal((B, dim)).astype(np.float32)
+            for b in backends:
+                sec = _timed(b, qs, k, repeats)
+                rows.append(dict(backend=b.name, n_docs=n, batch=B,
+                                 seconds=sec, us_per_query=sec / B * 1e6))
+                print(f"{b.name:8s} {n:8d} {B:6d} {sec:10.5f} "
+                      f"{sec / B * 1e6:10.1f}")
+    return rows, dict(k=k, dim=dim, repeats=repeats,
+                      devices=len(jax.devices()),
+                      mesh_shards=built_shards,
+                      kernel_mode=("pallas" if on_tpu or kernel_interpret
+                                   else "jnp-ref"))
+
+
+def main():
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--kb-sizes", default="4096,16384,65536",
+                    help="comma-separated KB sizes (docs)")
+    ap.add_argument("--batches", default="1,8,32",
+                    help="comma-separated query batch sizes")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard count for the sharded backend (0 = all "
+                         "visible devices; N > 1 on CPU forces an N-device "
+                         "host platform before jax initializes)")
+    ap.add_argument("--kernel-interpret", action="store_true",
+                    help="off-TPU, time the Pallas interpreter instead of "
+                         "the jnp oracle (slow; semantics-only)")
+    add_json_arg(ap)
+    args = ap.parse_args()
+    rows, meta = run([int(x) for x in args.kb_sizes.split(",")],
+                     [int(x) for x in args.batches.split(",")],
+                     args.k, args.dim, args.repeats, args.mesh_shards,
+                     args.kernel_interpret)
+    if args.json is not None:
+        write_json("backends", {"config": meta, "rows": rows}, args.json)
+
+
+if __name__ == "__main__":
+    main()

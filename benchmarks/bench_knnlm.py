@@ -1,27 +1,53 @@
 """Paper Figure 5: KNN-LM serving speed-ups (per-token retrieval; spatial-prefetch
-cache + token-match verification), k in {1, 8, 64}, fixed stride vs OS^3."""
+cache + token-match verification), k in {1, 8, 64}, fixed stride vs OS^3.
+
+``--backend`` routes the EDR datastore scan through the retrieval-backend
+layer (numpy / kernel / sharded); ``--mesh-shards N`` forces an N-device host
+platform for the sharded backend (applied before jax loads, like
+launch/serve.py)."""
 from __future__ import annotations
 
-import dataclasses
+import os
+import sys
 
-import jax
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import VOCAB, csv_row, knn_stack, run_requests, speedup_pair
-from repro.configs import RaLMConfig, get_config, reduced
-from repro.core.knnlm import KNNLMSeq, KNNLMSpec
-from repro.models.model import build_model
-from repro.retrieval.retrievers import ExactDenseRetriever, IVFRetriever
-from repro.serving.engine import ServeEngine
+from repro.retrieval.backends import bootstrap_mesh_shards  # noqa: E402
+
+bootstrap_mesh_shards()                 # before anything imports jax
+
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+
+from benchmarks.common import (VOCAB, csv_row, knn_stack,  # noqa: E402
+                               run_requests, speedup_pair)
+from repro.configs import RaLMConfig, get_config, reduced  # noqa: E402
+from repro.core.knnlm import KNNLMSeq, KNNLMSpec  # noqa: E402
+from repro.models.model import build_model  # noqa: E402
+from repro.retrieval.retrievers import (ExactDenseRetriever,  # noqa: E402
+                                        IVFRetriever)
+from repro.serving.engine import ServeEngine  # noqa: E402
 
 
-def run(n_requests: int = 3, ks=(1, 8, 64)) -> list:
+def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
+        mesh_shards: int = 0) -> list:
+    """``backend`` picks the EDR datastore-scan backend
+    (repro.retrieval.backends: numpy / kernel / sharded); ``mesh_shards``
+    caps the sharded shard count (0 = one shard per visible device)."""
     rows = []
     cfg = reduced(get_config("knnlm-247m"), layers=2, d_model=128, vocab=VOCAB)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     stream, enc, ds = knn_stack()
     prompts = [stream[i * 97:i * 97 + 48].tolist() for i in range(n_requests)]
-    for rname, retr in [("edr", ExactDenseRetriever(ds)),
+    edr = ExactDenseRetriever(ds, backend=backend, mesh_shards=mesh_shards)
+    if backend != "numpy":
+        detail = (f"{edr.backend.n_shards} shard(s)"
+                  if edr.backend.name == "sharded" else "device-resident KB")
+        print(f"EDR datastore backend: {edr.backend.name} ({detail})")
+    for rname, retr in [("edr", edr),
                         ("adr", IVFRetriever(ds, n_clusters=128, nprobe=4,
                                              iters=3))]:
         for k in ks:
@@ -42,4 +68,14 @@ def run(n_requests: int = 3, ks=(1, 8, 64)) -> list:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--backend", choices=["numpy", "kernel", "sharded"],
+                    default="numpy",
+                    help="EDR datastore-scan backend (repro.retrieval.backends)")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard count for --backend sharded (0 = one shard "
+                         "per visible device; N > 1 on CPU forces an "
+                         "N-device host platform before jax initializes)")
+    args = ap.parse_args()
+    run(backend=args.backend, mesh_shards=args.mesh_shards)

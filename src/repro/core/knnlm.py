@@ -10,6 +10,15 @@ RaLMSpec adaptations (paper §5.3):
     k=1024 neighbour sets exactly would be exponentially unlikely, matching the
     argmax of the interpolated distribution is both sufficient for output
     preservation and achievable.
+
+Datastore scans delegate to the retrieval-backend layer: the retriever handed
+in here is an :class:`~repro.retrieval.retrievers.ExactDenseRetriever` (or
+IVF) over the KNN datastore, so the per-token scan executes on whichever
+backend it was built with — flat numpy, the Pallas kernel with the datastore
+resident on device, or the mesh-sharded collective
+(``ExactDenseRetriever(ds, backend="sharded")``). Nothing in this module
+special-cases the execution strategy; `benchmarks/bench_knnlm.py --backend`
+sweeps it.
 """
 from __future__ import annotations
 
@@ -53,6 +62,11 @@ class KNNLMBase:
         self.rcfg = rcfg
         self.encoder = encoder
         self.kb = retriever.kb
+        if getattr(self.kb, "values", None) is None:
+            raise ValueError(
+                "KNN-LM serving needs a value-carrying datastore "
+                "(DenseKB from build_knn_datastore); got a KB without "
+                "per-entry values")
 
     def _query(self) -> np.ndarray:
         return self.encoder.encode(self.engine.tokens)

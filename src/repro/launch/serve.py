@@ -27,20 +27,33 @@ arrives at t=0, the saturated regime) or trace-driven via ``--arrival-trace
 ``--async-fleet`` pipelines the fleet rounds (either scheduler): the merged
 verification KB call runs on a worker thread while the fleet speculates the
 next lockstep stride, with per-slot carry/invalidation — the paper's +A,
-fleet-wide. A variant containing 'a' implies it. ``--retriever-backend
-kernel`` routes EDR through the Pallas blocked top-k (`kernels/dense_topk`,
-interpret mode on CPU, Mosaic on TPU):
+fleet-wide. A variant containing 'a' implies it.
+
+``--retriever-backend {numpy,kernel,sharded}`` picks EDR's execution backend
+(`repro.retrieval.backends`): the flat numpy scan, the Pallas blocked top-k
+(`kernels/dense_topk`, interpret mode on CPU, Mosaic on TPU; KB resident on
+device), or the mesh-sharded scan (`retrieval/sharded.py`) where every merged
+verification round is ONE collective over the KB shards. ``--mesh-shards N``
+sets the shard count — on a CPU host it forces an N-device host platform
+(XLA_FLAGS, applied below before jax initializes), simulating the multi-chip
+layout the sharded backend targets:
 
     PYTHONPATH=src python -m repro.launch.serve --concurrency 4 \
-        --async-fleet --retriever-backend kernel --requests 4
+        --retriever-backend sharded --mesh-shards 4 --requests 4
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
+# --mesh-shards N must force the N-device host platform BEFORE jax loads;
+# repro.retrieval.backends is jax-free at import time, so this is safe here
+from repro.retrieval.backends import bootstrap_mesh_shards
 
-import jax
-import numpy as np
+bootstrap_mesh_shards()
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.configs import RaLMConfig, get_config, reduced
 from repro.core.ralmspec import RaLMSeq, RaLMSpec
@@ -57,12 +70,14 @@ from repro.training.data import make_queries, synthetic_corpus
 
 
 def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-medium",
-                backend: str = "numpy", seed: int = 0, enc_dim: int = 64,
-                d_model: int = 256):
+                backend: str = "numpy", mesh_shards: int = 0, seed: int = 0,
+                enc_dim: int = 64, d_model: int = 256):
     """Model + corpus + retriever for the serving drivers and benchmarks.
-    ``backend='kernel'`` routes EDR through the Pallas blocked top-k
-    (interpret mode on CPU); ``enc_dim``/``d_model`` let benchmarks tune the
-    retrieval-vs-LM cost ratio (bench_async_fleet needs retrieval-heavy EDR)."""
+    ``backend`` picks EDR's execution backend (`repro.retrieval.backends`:
+    'numpy' / 'kernel' / 'sharded'); ``mesh_shards`` caps the sharded
+    backend's shard count (0 = one shard per visible device);
+    ``enc_dim``/``d_model`` let benchmarks tune the retrieval-vs-LM cost
+    ratio (bench_async_fleet needs retrieval-heavy EDR)."""
     cfg = reduced(get_config(arch), layers=2, d_model=d_model)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -73,8 +88,9 @@ def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-m
         retr = BM25Retriever(kb)
     else:
         kb = DenseKB.build(docs, enc)
-        retr = (ExactDenseRetriever(kb, backend=backend) if retriever == "edr"
-                else IVFRetriever(kb))
+        retr = (ExactDenseRetriever(kb, backend=backend,
+                                    mesh_shards=mesh_shards)
+                if retriever == "edr" else IVFRetriever(kb))
     return cfg, model, params, docs, enc, retr
 
 
@@ -103,7 +119,7 @@ def make_arrivals(n: int, rate: float, trace: str = "", seed: int = 0):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(allow_abbrev=False)
     ap.add_argument("--retriever", choices=["edr", "adr", "sr"], default="edr")
     ap.add_argument("--mode", choices=["seq", "spec", "both"], default="both")
     ap.add_argument("--variant", default="psa",
@@ -125,10 +141,17 @@ def main() -> None:
                          "verification KB call with the next lockstep "
                          "speculation stride (per-slot carry, adaptive gate; "
                          "implied by a variant containing 'a')")
-    ap.add_argument("--retriever-backend", choices=["numpy", "kernel"],
-                    default="numpy",
-                    help="EDR scoring backend: numpy flat scan, or the "
-                         "Pallas blocked top-k kernel (interpret mode on CPU)")
+    ap.add_argument("--retriever-backend",
+                    choices=["numpy", "kernel", "sharded"], default="numpy",
+                    help="EDR scoring backend: numpy flat scan, the Pallas "
+                         "blocked top-k kernel (interpret mode on CPU), or "
+                         "the mesh-sharded scan (one collective per merged "
+                         "verification round)")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="shard count for --retriever-backend sharded "
+                         "(0 = one shard per visible device; on CPU, N > 1 "
+                         "forces an N-device host platform before jax "
+                         "initializes)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate, requests per modeled second "
                          "(0 = all requests arrive at t=0)")
@@ -138,9 +161,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed for Poisson arrivals")
     args = ap.parse_args()
+    if args.retriever != "edr" and args.retriever_backend != "numpy":
+        # fail loudly rather than silently measuring the wrong scan: only the
+        # exact dense retriever delegates to the backend layer today
+        ap.error(f"--retriever-backend {args.retriever_backend} applies to "
+                 "--retriever edr only (ADR/SR have a single execution "
+                 "strategy each)")
 
     cfg, model, params, docs, enc, retr = build_stack(
-        args.retriever, n_docs=args.n_docs, backend=args.retriever_backend)
+        args.retriever, n_docs=args.n_docs, backend=args.retriever_backend,
+        mesh_shards=args.mesh_shards)
+    if args.retriever == "edr" and args.retriever_backend != "numpy":
+        b = retr.backend
+        detail = (f"{b.n_shards} shard(s), one collective per KB call"
+                  if b.name == "sharded" else "device-resident KB")
+        print(f"EDR backend: {b.name} ({detail})")
     rcfg = variant_config(args.variant.replace("-", ""),
                           RaLMConfig(max_new_tokens=args.max_new,
                                      speculation_stride=args.stride))
@@ -207,6 +242,11 @@ def main() -> None:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
         print(f"outputs identical: {same}   "
               f"speed-up {results['seq'][0] / max(results['spec'][0], 1e-9):.2f}x")
+    if args.retriever == "edr" and retr.backend.name == "sharded":
+        # the merge invariant, visible: every KB call (seed or merged
+        # verification round) executed as exactly one sharded collective
+        print(f"sharded collectives: {retr.backend.calls}  "
+              f"KB calls: {retr.stats.calls}  (1 collective per call)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,255 @@
+"""The retrieval-backend layer: one interface, three execution strategies.
+
+Every dense retriever in this repo ultimately runs the same scan — score a
+query batch against the KB embedding matrix, keep the top-k — but *where* that
+scan executes is a serving-level decision, not a retriever-level one:
+
+  * :class:`FlatBackend`    — the numpy argpartition scan (single host, BLAS).
+  * :class:`KernelBackend`  — the Pallas blocked top-k (`kernels/dense_topk`,
+                              interpret mode on CPU, Mosaic on TPU), with the
+                              KB embeddings resident on device: uploaded once
+                              at construction instead of per call.
+  * :class:`ShardedBackend` — the KB sharded across a mesh
+                              (`retrieval/sharded.py`): per-shard blocked
+                              top-k + ONE all-gather per call, so the fleet's
+                              merged verification round is a single collective
+                              program however many requests participate.
+
+All three return identical ``(ids, scores)`` under the CANONICAL tie order —
+score descending, then id ascending — so the serving layers can swap backends
+without perturbing a single served token (tests/test_backends.py asserts
+byte-identity across batch sizes, k values, tie-heavy KBs, and KB sizes that
+don't divide the shard count). Backends are *pure* scans: no timing, no stats
+— the `RetrieverStats` bookkeeping lives in the retriever wrapper
+(`retrievers._TimedRetriever`), which consults :meth:`~DenseSearchBackend.cold_shape`
+to exclude compile-polluted first calls per shape from the latency-unit
+calibration.
+
+Adding a backend (multi-host, quantized index, ...) is a leaf change here plus
+a name in :func:`make_backend`; no retriever or server grows a constructor
+branch for it.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+
+def bootstrap_mesh_shards() -> None:
+    """``--mesh-shards N`` needs N host-platform devices, and XLA only reads
+    ``xla_force_host_platform_device_count`` before the backend initializes —
+    so drivers call this to peek at argv and set the flag BEFORE anything
+    imports jax. A no-op when jax is already loaded, when the operator set
+    the flag themselves, or when the value isn't a plain int (argparse will
+    report that properly once the driver parses for real)."""
+    if "jax" in sys.modules:
+        return
+    n = 0
+    argv = sys.argv
+    for i, a in enumerate(argv):
+        try:
+            if a == "--mesh-shards" and i + 1 < len(argv):
+                n = int(argv[i + 1])
+            elif a.startswith("--mesh-shards="):
+                n = int(a.split("=", 1)[1])
+        except ValueError:
+            return                    # malformed: leave it to argparse
+    if n > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+@runtime_checkable
+class DenseSearchBackend(Protocol):
+    """Pure dense top-k scan over a fixed KB embedding matrix."""
+
+    name: str            # CLI spelling ("numpy" / "kernel" / "sharded")
+    calls: int           # completed scans (ShardedBackend: collectives issued)
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """queries (B, d) float32 -> (ids (B, k) int64, scores (B, k) float32),
+        rows sorted canonically: score desc, ties by id asc."""
+        ...
+
+    def cold_shape(self, B: int, k: int) -> bool:
+        """True iff the NEXT search at this shape pays an XLA compile (and
+        records the shape as seen). The compile cache lives on the backend,
+        so retrievers sharing one backend agree on what is warm."""
+        ...
+
+
+class _JitShapeMixin:
+    """Per-(B, k) compile tracking for jit-backed scans. ``n_rows`` is the
+    KB size the backend clamps k against — distinct raw k values that clamp
+    to the same compiled program must share one cache entry."""
+
+    def _init_shapes(self, n_rows: int):
+        self._shapes = set()
+        self._n_rows = n_rows
+
+    def cold_shape(self, B: int, k: int) -> bool:
+        key = (B, min(k, self._n_rows))
+        if key in self._shapes:
+            return False
+        self._shapes.add(key)
+        return True
+
+
+def canonical_topk(s: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Top-k of a scored matrix ``s`` (B, N) under the canonical tie order
+    (score desc, id asc) — the order ``jax.lax.top_k`` and the Pallas kernel's
+    max-extraction loop both produce, so numpy results are comparable
+    byte-for-byte with the accelerator backends.
+
+    Vectorized fast path: argpartition for the top-k *set*, candidate ids
+    sorted ascending, then a stable sort on score. argpartition picks
+    arbitrary members among ties AT the k-th score, so rows where the
+    boundary is ambiguous (more ties at the threshold than slots left) are
+    re-selected exactly: all ids strictly above the threshold, then the
+    lowest ids at it."""
+    B, N = s.shape
+    k = min(k, N)
+    cand = np.argpartition(-s, kth=k - 1, axis=1)[:, :k] if k < N \
+        else np.tile(np.arange(N), (B, 1))
+    cand = np.sort(cand, axis=1)                      # ties resolve id-asc
+    part = np.take_along_axis(s, cand, axis=1)
+    thresh = part.min(axis=1)                         # k-th largest per row
+    n_gt = (s > thresh[:, None]).sum(axis=1)
+    ambiguous = np.nonzero((s == thresh[:, None]).sum(axis=1) > k - n_gt)[0]
+    for b in ambiguous:                               # boundary ties: exact fix
+        gt = np.nonzero(s[b] > thresh[b])[0]
+        eq = np.nonzero(s[b] == thresh[b])[0][:k - gt.size]
+        cand[b] = np.concatenate([gt, eq])
+        part[b] = s[b, cand[b]]
+    order = np.argsort(-part, axis=1, kind="stable")  # stable: keeps id-asc
+    ids = np.take_along_axis(cand, order, axis=1).astype(np.int64)
+    return ids, np.take_along_axis(part, order, axis=1).astype(np.float32)
+
+
+class FlatBackend:
+    """Single-host numpy scan: one BLAS matmul + canonical argpartition top-k."""
+
+    name = "numpy"
+
+    def __init__(self, embeddings: np.ndarray):
+        self.embeddings = embeddings
+        self.calls = 0
+
+    def cold_shape(self, B: int, k: int) -> bool:
+        return False                     # nothing compiles
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        s = queries @ self.embeddings.T                  # (B, N)
+        self.calls += 1
+        return canonical_topk(s, k)
+
+
+class KernelBackend(_JitShapeMixin):
+    """Pallas blocked top-k (`kernels.ops.dense_topk`): KB tiles stream
+    HBM -> VMEM, the query block stays MXU-resident. The KB embedding matrix
+    is put on device ONCE here — per-call uploads of a multi-GB index would
+    dwarf the scan itself. ``force_ref=True`` swaps the kernel body for its
+    jnp oracle (same results; wall-clock benchmarks use it off-TPU, where
+    interpret-mode overhead would swamp the numbers)."""
+
+    name = "kernel"
+
+    def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
+        import jax
+
+        from repro.kernels.ops import dense_topk
+        self._fn = dense_topk
+        self._force_ref = force_ref
+        self._kb = jax.device_put(np.asarray(embeddings, np.float32))
+        self.calls = 0
+        self._init_shapes(self._kb.shape[0])
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        # same k > N clamp as the other backends: identical (B, min(k, N))
+        # results everywhere, and lax.top_k never sees an oversized k
+        scores, ids = self._fn(jnp.asarray(queries), self._kb,
+                               min(k, self._kb.shape[0]),
+                               force_ref=self._force_ref)
+        self.calls += 1
+        return np.asarray(ids, np.int64), np.asarray(scores, np.float32)
+
+
+class ShardedBackend(_JitShapeMixin):
+    """KB sharded over a live mesh: every ``search`` is ONE collective program
+    (`sharded_dense_topk`: per-shard scan + all-gather of k candidates per
+    shard + replicated global reduce). The KB is padded to a shard multiple
+    and placed shard-wise at BUILD time, so per-call work is only the
+    replicated query upload; padded rows score ``-inf`` and can never reach
+    the global top-k. ``calls`` counts collectives issued — the fleet's
+    one-merged-call-per-round invariant is asserted against it."""
+
+    name = "sharded"
+
+    def __init__(self, embeddings: np.ndarray, n_shards: Optional[int] = None,
+                 axis: str = "data", mesh=None):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.retrieval.sharded import sharded_dense_topk
+        if mesh is None:
+            devs = jax.devices()
+            n = len(devs) if not n_shards else min(n_shards, len(devs))
+            mesh = jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))
+        self.mesh, self.axis = mesh, axis
+        self.n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+        self.n_total = embeddings.shape[0]
+        shard_n = -(-self.n_total // self.n_shards)
+        pad = shard_n * self.n_shards - self.n_total
+        padded = np.asarray(embeddings, np.float32)
+        if pad:
+            padded = np.pad(padded, ((0, pad), (0, 0)))
+        self._kb = jax.device_put(jnp.asarray(padded),
+                                  NamedSharding(mesh, P(axis, None)))
+        self.calls = 0
+        self._init_shapes(self.n_total)
+
+        import functools
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def _scan(q, kb, k):
+            return sharded_dense_topk(q, kb, k, self.mesh, axis=self.axis,
+                                      n_total=self.n_total)
+
+        self._scan = _scan
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+
+        from repro.retrieval.sharded import mesh_context
+        with mesh_context(self.mesh):
+            scores, gids = self._scan(jnp.asarray(queries, jnp.float32),
+                                      self._kb, min(k, self.n_total))
+        self.calls += 1
+        return np.asarray(gids, np.int64), np.asarray(scores, np.float32)
+
+
+BACKENDS = ("numpy", "kernel", "sharded")
+
+
+def make_backend(name: str, embeddings: np.ndarray, *,
+                 n_shards: Optional[int] = None, mesh=None,
+                 force_ref: bool = False) -> DenseSearchBackend:
+    """CLI-name -> backend instance (the one constructor branch in the repo).
+
+    ``n_shards``/``mesh`` configure :class:`ShardedBackend` (default: one
+    shard per visible device); ``force_ref`` routes :class:`KernelBackend`
+    through the jnp oracle instead of the Pallas body."""
+    if name == "numpy":
+        return FlatBackend(embeddings)
+    if name == "kernel":
+        return KernelBackend(embeddings, force_ref=force_ref)
+    if name == "sharded":
+        return ShardedBackend(embeddings, n_shards=n_shards, mesh=mesh)
+    raise KeyError(f"unknown retrieval backend {name!r}; known: {BACKENDS}")

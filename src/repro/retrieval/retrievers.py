@@ -1,9 +1,13 @@
 """The three retriever classes the paper evaluates.
 
   * ExactDenseRetriever  (EDR) — brute-force inner product over the flat index.
-                                 Backend 'numpy' for CPU serving benchmarks; backend
-                                 'kernel' routes through the Pallas blocked top-k
-                                 (interpret mode on CPU, MXU-tiled on TPU).
+                                 Scoring is delegated to a pluggable
+                                 :mod:`repro.retrieval.backends` object:
+                                 'numpy' (flat BLAS scan), 'kernel' (Pallas
+                                 blocked top-k, device-resident KB), or
+                                 'sharded' (KB sharded over a mesh, one
+                                 collective per call) — all byte-identical
+                                 under the canonical tie order.
   * IVFRetriever         (ADR) — the TPU-native replacement for DPR-HNSW (DESIGN §3):
                                  k-means coarse quantizer + nprobe cluster scan.
                                  Cheap, less accurate, latency ~ linear in batch with
@@ -12,6 +16,12 @@
 
 All retrievers expose:  retrieve(queries, k) -> (ids (B,k) int64, scores (B,k)).
 ``queries`` is (B, d) embeddings for dense retrievers, a list of term-lists for BM25.
+
+The wall-clock timing + :class:`RetrieverStats` bookkeeping every retriever
+needs lives ONCE in :class:`_TimedRetriever`; subclasses implement only the
+pure scan (``_search``) and input normalization (``_prep``). Jit-backed
+backends additionally get per-shape warmup tracking so one-time XLA compile
+cost never pollutes the modeled-latency calibration.
 """
 from __future__ import annotations
 
@@ -21,6 +31,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.retrieval.backends import DenseSearchBackend, make_backend
 from repro.retrieval.kb import DenseKB, SparseKB
 
 
@@ -39,6 +50,12 @@ class RetrieverStats:
       EDR/SR: t(B) = unit * (1 + 0.05 * (B - 1))      (near-constant total)
       ADR:    t(B) = unit * (0.55 + 0.45 * B)          (linear, large intercept)
 
+    Calibration hygiene: calls flagged ``warmup=True`` (a jitted backend's
+    first call at a given shape — it pays the XLA compile) are counted in the
+    call/query/time ledger but EXCLUDED from the ``_unit`` EMA, so the modeled
+    timeline and the async overlap gate aren't skewed by compilation cost
+    that paper hardware pays once at server start.
+
     Thread-safe: with async (pipelined) verification the fleet's worker thread
     calls ``add`` while the main thread reads ``model_latency`` for the overlap
     gate and the analytic timeline, so the counters and the ``_unit`` EMA are
@@ -51,6 +68,7 @@ class RetrieverStats:
         self.queries = 0
         self.time = 0.0
         self.modeled_time = 0.0
+        self.warmup_calls = 0
         self._unit: Optional[float] = None
         self._lock = threading.RLock()
 
@@ -59,15 +77,18 @@ class RetrieverStats:
             return 0.55 + 0.45 * B
         return 1.0 + 0.05 * (B - 1)
 
-    def add(self, n_queries: int, dt: float):
+    def add(self, n_queries: int, dt: float, warmup: bool = False):
         with self._lock:
             self.calls += 1
             self.queries += n_queries
             self.time += dt
+            if warmup:
+                # compile-polluted sample: keep it out of the unit calibration
+                self.warmup_calls += 1
             # calibrate the unit cost from SINGLE-query calls only — on this
             # 1-core box a batch-B matmul costs ~B x the GEMV, which would
             # pollute the unit
-            if n_queries == 1:
+            elif n_queries == 1:
                 self._unit = (dt if self._unit is None
                               else 0.8 * self._unit + 0.2 * dt)
             elif self._unit is None:
@@ -79,41 +100,64 @@ class RetrieverStats:
             return (self._unit or 0.0) * self.factor(B)
 
 
-class ExactDenseRetriever:
+class _TimedRetriever:
+    """Shared retrieve() shell: input normalization, wall-clock timing, stats
+    ledger, and per-shape warmup detection for jit-backed scans. Subclasses
+    provide the pure scan in ``_search`` (and may override ``_prep``); the
+    backend objects themselves stay measurement-free."""
+
+    stats: RetrieverStats
+
+    def _prep(self, queries):
+        return np.atleast_2d(np.asarray(queries, np.float32))
+
+    def _cold_shape(self, B: int, k: int) -> bool:
+        """Will the next scan at this shape pay a one-time compile? Backed
+        retrievers delegate to the backend, which owns the jit cache (so
+        retrievers sharing a backend agree on what is warm)."""
+        return False
+
+    def _search(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def retrieve(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        queries = self._prep(queries)
+        warmup = self._cold_shape(len(queries), k)
+        t0 = time.perf_counter()
+        ids, scores = self._search(queries, k)
+        self.stats.add(len(queries), time.perf_counter() - t0, warmup=warmup)
+        return ids, scores
+
+
+class ExactDenseRetriever(_TimedRetriever):
+    """EDR: exact scan, execution strategy chosen by the backend layer.
+
+    ``backend`` is a :mod:`repro.retrieval.backends` name ('numpy' / 'kernel'
+    / 'sharded') or an already-built backend object (the serving layer builds
+    ShardedBackend with its mesh knobs); ``mesh_shards`` caps the shard count
+    for the sharded backend (0 = one shard per visible device)."""
+
     name = "EDR"
 
-    def __init__(self, kb: DenseKB, backend: str = "numpy"):
+    def __init__(self, kb: DenseKB, backend="numpy", mesh_shards: int = 0):
         self.kb = kb
-        self.backend = backend
+        self.backend: DenseSearchBackend = (
+            backend if not isinstance(backend, str)
+            else make_backend(backend, kb.embeddings,
+                              n_shards=mesh_shards or None))
         self.stats = RetrieverStats("const")
-        self._kernel_fn = None
-        if backend == "kernel":
-            from repro.kernels.ops import dense_topk
-            self._kernel_fn = dense_topk
 
-    def retrieve(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        t0 = time.perf_counter()
-        if self._kernel_fn is not None:
-            import jax.numpy as jnp
-            scores, ids = self._kernel_fn(jnp.asarray(queries),
-                                          jnp.asarray(self.kb.embeddings), k)
-            ids, scores = np.asarray(ids, np.int64), np.asarray(scores)
-        else:
-            s = queries @ self.kb.embeddings.T               # (B, N)
-            ids = np.argpartition(-s, kth=min(k, s.shape[1] - 1), axis=1)[:, :k]
-            part = np.take_along_axis(s, ids, axis=1)
-            order = np.argsort(-part, axis=1, kind="stable")
-            ids = np.take_along_axis(ids, order, axis=1).astype(np.int64)
-            scores = np.take_along_axis(part, order, axis=1)
-        self.stats.add(queries.shape[0], time.perf_counter() - t0)
-        return ids, scores
+    def _cold_shape(self, B: int, k: int) -> bool:
+        return self.backend.cold_shape(B, k)
+
+    def _search(self, queries, k):
+        return self.backend.search(queries, k)
 
     def keys_of(self, ids) -> np.ndarray:
         return self.kb.embeddings[np.asarray(ids, np.int64)]
 
 
-class IVFRetriever:
+class IVFRetriever(_TimedRetriever):
     name = "ADR"
 
     def __init__(self, kb: DenseKB, n_clusters: int = 64, nprobe: int = 4,
@@ -147,7 +191,7 @@ class IVFRetriever:
         self._bucket_len = np.asarray([len(bk) for bk in self.buckets],
                                       np.int64)
 
-    def retrieve(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         """Vectorized nprobe scan: padded fixed-shape candidate gather + ONE
         batched matmul over the whole query batch (no per-query Python loop).
 
@@ -159,8 +203,6 @@ class IVFRetriever:
         fixed by the index (nprobe x Lmax), a batched call is byte-identical
         to the same queries issued one at a time
         (tests/test_retrievers.py::test_batched_equals_sequential)."""
-        queries = np.atleast_2d(np.asarray(queries, np.float32))
-        t0 = time.perf_counter()
         if not hasattr(self, "_bucket_pad"):   # caches built pre-vectorization
             self._build_pads()
         B = queries.shape[0]
@@ -197,24 +239,25 @@ class IVFRetriever:
         last = np.maximum(kk - 1, 0)[:, None]
         ids = np.where(fill, np.take_along_axis(ids, last, axis=1), ids)
         sc = np.where(fill, np.take_along_axis(sc, last, axis=1), sc)
-        self.stats.add(B, time.perf_counter() - t0)
         return ids.astype(np.int64), sc.astype(np.float32)
 
     def keys_of(self, ids) -> np.ndarray:
         return self.kb.embeddings[np.asarray(ids, np.int64)]
 
 
-class BM25Retriever:
+class BM25Retriever(_TimedRetriever):
     name = "SR"
 
     def __init__(self, kb: SparseKB):
         self.kb = kb
         self.stats = RetrieverStats("const")
 
-    def retrieve(self, queries: List[list], k: int) -> Tuple[np.ndarray, np.ndarray]:
+    def _prep(self, queries):
         if queries and isinstance(queries[0], (int, np.integer)):
-            queries = [queries]
-        t0 = time.perf_counter()
+            return [queries]
+        return queries
+
+    def _search(self, queries: List[list], k: int) -> Tuple[np.ndarray, np.ndarray]:
         ids, scores = [], []
         for q in queries:
             s = self.kb.score(q)
@@ -223,7 +266,6 @@ class BM25Retriever:
             top = top[np.argsort(-s[top], kind="stable")]
             ids.append(top)
             scores.append(s[top])
-        self.stats.add(len(queries), time.perf_counter() - t0)
         return np.stack(ids).astype(np.int64), np.stack(scores)
 
     def keys_of(self, ids) -> np.ndarray:

@@ -7,17 +7,32 @@ jnp oracle under shard_map here), then the per-shard candidates — k << shard s
 are all-gathered and reduced to a global top-k. Collective volume is
 O(devices * B * k * 8 bytes): negligible next to the HBM scan, which is the point —
 batched verification scales out linearly with chips.
+
+Serving reaches this through :class:`repro.retrieval.backends.ShardedBackend`
+(``--retriever-backend sharded``): the fleet's merged verification call per
+round is exactly one invocation of :func:`sharded_dense_topk`, i.e. one
+collective per round however many requests participate.
+
+KB sizes need not divide the shard count: the KB is padded to a shard multiple
+(here, or at build time by ShardedBackend) and the padded rows' scores are
+masked to -inf BEFORE the per-shard top-k, so they can neither displace real
+candidates within a shard nor reach the global top-k. Results are
+byte-identical to the single-host scan under the canonical tie order (score
+desc, id asc — `jax.lax.top_k` order per shard; across shards, equal scores
+resolve to the lower shard index = lower global id because shard candidates
+concatenate in shard order).
 """
 from __future__ import annotations
 
 from contextlib import nullcontext
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.ref import dense_topk_ref
+NEG = -3.4e38          # same sentinel as kernels/dense_topk
 
 # jax moved shard_map out of experimental and renamed check_rep -> check_vma;
 # support both spellings so the seed toolchain (0.4.x) and current jax run this.
@@ -39,24 +54,47 @@ def mesh_context(mesh):
 
 
 def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
-                       axis: str = "data"):
+                       axis: str = "data", *, n_total: Optional[int] = None):
     """queries (B, d) replicated; kb (N, d) sharded over `axis`.
     -> (scores (B, k), global ids (B, k)).
+
+    ``n_total`` is the number of REAL KB rows when ``kb`` arrives pre-padded
+    to a shard multiple (ShardedBackend pads at build time); rows at global
+    ids >= n_total are padding and score -inf. Unpadded non-divisible KBs are
+    padded here instead — either way no shard ever misindexes and no padded
+    id can reach the global top-k.
     """
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     N = kb.shape[0]
-    shard_n = N // n_shards
+    if n_total is None:
+        n_total = N
+    shard_n = -(-N // n_shards)
+    pad = shard_n * n_shards - N
+    if pad:
+        kb = jnp.pad(kb, ((0, pad), (0, 0)))
+    assert k <= n_total, f"top-{k} of a {n_total}-row KB"
+    # a shard holds only shard_n rows, so it can contribute at most that many
+    # global candidates; n_shards * k_local >= n_total >= k keeps the global
+    # reduce exact when k exceeds the shard size
+    k_local = min(k, shard_n)
 
     def local(q, kb_shard):
-        s, ids = dense_topk_ref(q, kb_shard[0] if kb_shard.ndim == 3 else kb_shard, k)
+        kb2 = kb_shard[0] if kb_shard.ndim == 3 else kb_shard
         shard_idx = jax.lax.axis_index(axis)
+        s_full = jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
+                            kb2.astype(jnp.float32))
+        # mask padded rows BEFORE the per-shard top-k: a zero-padded row
+        # scores 0.0, which would displace genuinely negative candidates
+        col_gids = shard_idx * shard_n + jnp.arange(shard_n, dtype=jnp.int32)
+        s_full = jnp.where(col_gids[None, :] < n_total, s_full, NEG)
+        s, ids = jax.lax.top_k(s_full, k_local)
         gids = ids.astype(jnp.int32) + shard_idx * shard_n
-        # gather candidates from every shard: (n_shards, B, k)
+        # gather candidates from every shard: (n_shards, B, k_local)
         all_s = jax.lax.all_gather(s, axis)
         all_g = jax.lax.all_gather(gids, axis)
         B = q.shape[0]
-        cat_s = jnp.moveaxis(all_s, 0, 1).reshape(B, n_shards * k)
-        cat_g = jnp.moveaxis(all_g, 0, 1).reshape(B, n_shards * k)
+        cat_s = jnp.moveaxis(all_s, 0, 1).reshape(B, n_shards * k_local)
+        cat_g = jnp.moveaxis(all_g, 0, 1).reshape(B, n_shards * k_local)
         top_s, pos = jax.lax.top_k(cat_s, k)
         top_g = jnp.take_along_axis(cat_g, pos, axis=1)
         return top_s, top_g

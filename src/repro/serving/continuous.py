@@ -10,7 +10,9 @@ BatchedServeEngine.admit), and retires finished slots immediately. The round
 loop is FleetServer._run_round over whatever slot set is live *this* round, so
 every live slot's verification queries still merge into ONE batched KB call
 per round (§A.1 cross-request batched verification) no matter how the slot
-population churns.
+population churns — and, like every KB call in the repo, that merged call
+executes on whichever retrieval backend the retriever was built with (flat /
+kernel / sharded-mesh; one collective per call for the latter).
 
 Timeline: the server advances a MODELED clock (the paper's §A.1
 batched-retrieval latency shape for KB calls + measured wall time for the

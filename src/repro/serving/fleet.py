@@ -9,6 +9,13 @@ verification queries merge into ONE batched KB call. Per-request verification
 cost becomes model_latency(sum of strides) / N — the §A.1 shape rewards this
 directly, which is what bench_fleet.py measures.
 
+The merged call is backend-agnostic: it goes through ``retriever.retrieve``,
+which delegates execution to the retrieval-backend layer
+(`repro.retrieval.backends`) — with ``--retriever-backend sharded`` the one
+merged verification call per round executes as ONE collective program over
+the KB shards (`retrieval/sharded.py`), sync or async/pipelined alike
+(tests/test_backends.py asserts calls == collectives == rounds + 1).
+
 Output preservation holds per slot: each slot owns a full Algorithm-1
 :class:`~repro.core.ralmspec.RequestState` (cache, OS^3, ledger), verification
 compares against the same KB ground truth, and rollback restores only that

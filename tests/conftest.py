@@ -1,9 +1,14 @@
 import os
 import sys
 
-# tests must see the single real CPU device (the 512-device override is applied by
-# repro.launch.dryrun only, in its own process)
+# tests run on CPU with a simulated 4-device host platform so the sharded
+# retrieval backend's collectives execute over a real (forced) multi-device
+# mesh in the fast tier; both flags must be set before jax initializes. The
+# 512-device dry-run override remains subprocess-only (repro.launch.dryrun).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4").strip()
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

@@ -53,6 +53,7 @@ def test_doc_commands_reference_real_entry_points():
     ["benchmarks/bench_continuous.py"],
     ["benchmarks/bench_fleet.py"],
     ["benchmarks/bench_async_fleet.py"],
+    ["benchmarks/bench_backends.py"],
 ])
 def test_cli_help_smoke(target):
     env = dict(os.environ)
