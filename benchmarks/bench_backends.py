@@ -21,6 +21,12 @@ funnels into — across KB size and query batch for each execution backend in
               real mesh runs, and its latency is one scan + O(shards*B*k)
               collective volume.
 
+``--retriever`` adds the ADR axis: `adr` (or `both`) times the IVF probe —
+host-side centroid scan + the backend-executed gathered bucket scan
+(`search_gathered`) — through the SAME three backends, the regime where the
+paper reports its weakest speedups (1.04–1.39x) and backend efficiency
+matters most. Rows carry a `retriever` field either way.
+
 Per cell: median seconds over --repeats (first call per shape excluded — it
 pays the XLA compile), and µs/query. ``--json`` emits BENCH_backends.json via
 the shared benchmarks/common.py flag.
@@ -44,27 +50,42 @@ import numpy as np  # noqa: E402
 from common import add_json_arg, write_json  # noqa: E402
 
 
-def _timed(backend, qs, k, repeats):
-    backend.search(qs, k)               # warm: jit compile for this shape
+def _timed(call, repeats):
+    call()                              # warm: jit compile for this shape
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        backend.search(qs, k)
+        call()
         ts.append(time.perf_counter() - t0)
     return sorted(ts)[len(ts) // 2]
 
 
-def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret):
+def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
+        retriever="edr", n_clusters=64, nprobe=4):
     import jax
 
     from repro.retrieval.backends import make_backend
+    from repro.retrieval.kb import DenseKB
+    from repro.retrieval.retrievers import IVFRetriever, RetrieverStats
+
+    def ivf_with_backend(proto, backend):
+        """Same IVF index (shared clustering — Lloyd runs once per KB size),
+        different execution backend; the __new__ pattern common._cached_ivf
+        uses."""
+        r = IVFRetriever.__new__(IVFRetriever)
+        r.kb, r.nprobe = proto.kb, proto.nprobe
+        r.centroids, r.buckets = proto.centroids, proto.buckets
+        r._bucket_pad, r._bucket_len = proto._bucket_pad, proto._bucket_len
+        r.stats = RetrieverStats("linear_intercept")
+        r.backend = backend
+        return r
     rng = np.random.default_rng(0)
     on_tpu = jax.default_backend() == "tpu"
     force_ref = not on_tpu and not kernel_interpret
     rows = []
     built_shards = None                 # what ShardedBackend actually ran with
-    print(f"{'backend':8s} {'n_docs':>8s} {'batch':>6s} {'seconds':>10s} "
-          f"{'us/query':>10s}")
+    print(f"{'retr':4s} {'backend':8s} {'n_docs':>8s} {'batch':>6s} "
+          f"{'seconds':>10s} {'us/query':>10s}")
     for n in kb_sizes:
         emb = rng.standard_normal((n, dim)).astype(np.float32)
         emb /= np.linalg.norm(emb, axis=1, keepdims=True)
@@ -74,15 +95,37 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret):
             make_backend("sharded", emb, n_shards=mesh_shards or None),
         ]
         built_shards = backends[-1].n_shards    # may be < --mesh-shards
+        scans = []                      # (backend name, retriever axis, call)
+        proto = None                    # IVF clustering, built once per KB
+        for b in backends:
+            if retriever in ("edr", "both"):
+                scans.append((b.name, "edr",
+                              lambda qs, kk, b=b: b.search(qs, kk)))
+            if retriever in ("adr", "both"):
+                # ONE clustering per KB size, shared across backends: the
+                # cell times the probe — host centroid scan +
+                # backend-executed gathered bucket scan
+                if proto is None:
+                    proto = IVFRetriever(DenseKB(embeddings=emb, docs=[[]] * n),
+                                         n_clusters=min(n_clusters, n),
+                                         nprobe=nprobe, backend=b)
+                    r = proto
+                else:
+                    r = ivf_with_backend(proto, b)
+                scans.append((b.name, "adr",
+                              lambda qs, kk, r=r: r.retrieve(qs, kk)))
         for B in batches:
             qs = rng.standard_normal((B, dim)).astype(np.float32)
-            for b in backends:
-                sec = _timed(b, qs, k, repeats)
-                rows.append(dict(backend=b.name, n_docs=n, batch=B,
-                                 seconds=sec, us_per_query=sec / B * 1e6))
-                print(f"{b.name:8s} {n:8d} {B:6d} {sec:10.5f} "
+            for bname, axis, call in scans:
+                sec = _timed(lambda: call(qs, k), repeats)
+                rows.append(dict(backend=bname, retriever=axis, n_docs=n,
+                                 batch=B, seconds=sec,
+                                 us_per_query=sec / B * 1e6))
+                print(f"{axis:4s} {bname:8s} {n:8d} {B:6d} {sec:10.5f} "
                       f"{sec / B * 1e6:10.1f}")
     return rows, dict(k=k, dim=dim, repeats=repeats,
+                      retriever=retriever, n_clusters=n_clusters,
+                      nprobe=nprobe,
                       devices=len(jax.devices()),
                       mesh_shards=built_shards,
                       kernel_mode=("pallas" if on_tpu or kernel_interpret
@@ -105,12 +148,21 @@ def main():
     ap.add_argument("--kernel-interpret", action="store_true",
                     help="off-TPU, time the Pallas interpreter instead of "
                          "the jnp oracle (slow; semantics-only)")
+    ap.add_argument("--retriever", choices=["edr", "adr", "both"],
+                    default="edr",
+                    help="which scan to time: edr (full dense top-k), adr "
+                         "(the IVF probe via search_gathered), or both")
+    ap.add_argument("--n-clusters", type=int, default=64,
+                    help="ADR axis: IVF cluster count (clamped to the KB size)")
+    ap.add_argument("--nprobe", type=int, default=4,
+                    help="ADR axis: probed clusters per query")
     add_json_arg(ap)
     args = ap.parse_args()
     rows, meta = run([int(x) for x in args.kb_sizes.split(",")],
                      [int(x) for x in args.batches.split(",")],
                      args.k, args.dim, args.repeats, args.mesh_shards,
-                     args.kernel_interpret)
+                     args.kernel_interpret, args.retriever,
+                     args.n_clusters, args.nprobe)
     if args.json is not None:
         write_json("backends", {"config": meta, "rows": rows}, args.json)
 

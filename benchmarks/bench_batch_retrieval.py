@@ -2,11 +2,19 @@
 the structural fact batched verification exploits."""
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import csv_row, dense_stack, make_retriever, sparse_stack
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (add_json_arg, add_tiny_arg,  # noqa: E402
+                               apply_tiny, csv_row, make_retriever,
+                               rows_to_json, write_json)
 
 
 def _time_batches(retr, make_queries_fn, sizes=(1, 2, 4, 8, 16), reps: int = 3):
@@ -21,24 +29,49 @@ def _time_batches(retr, make_queries_fn, sizes=(1, 2, 4, 8, 16), reps: int = 3):
     return out
 
 
-def run() -> list:
+def run(retrievers=("edr", "adr", "sr"), sizes=(1, 2, 4, 8, 16),
+        reps: int = 3) -> list:
     rows = []
-    for rname in ("edr", "adr", "sr"):
+    for rname in retrievers:
         docs, enc, retr = make_retriever(rname)
         if rname == "sr":
             make_q = lambda n: [docs[i][:8] for i in range(n)]
         else:
             make_q = lambda n: np.stack([enc.encode(docs[i][:10])
                                          for i in range(n)])
-        per_q = _time_batches(retr, make_q)
-        ratio = per_q[1] / max(per_q[16], 1e-12)
+        per_q = _time_batches(retr, make_q, sizes=sizes, reps=reps)
+        big = max(sizes)
+        ratio = per_q[sizes[0]] / max(per_q[big], 1e-12)
         for b, t in per_q.items():
-            rows.append(csv_row(f"fig6/{rname}/batch{b}", 1e6 * t,
-                                f"perq_speedup_vs_b1={per_q[1] / max(t, 1e-12):.2f}x"))
+            rows.append(csv_row(
+                f"fig6/{rname}/batch{b}", 1e6 * t,
+                f"perq_speedup_vs_b{sizes[0]}="
+                f"{per_q[sizes[0]] / max(t, 1e-12):.2f}x"))
             print(rows[-1])
-        print(f"  -> {rname}: batch-16 is {ratio:.1f}x cheaper per query than batch-1")
+        print(f"  -> {rname}: batch-{big} is {ratio:.1f}x cheaper per query "
+              f"than batch-{sizes[0]}")
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--retrievers", default="edr,adr,sr",
+                    help="comma-separated subset of edr,adr,sr")
+    ap.add_argument("--sizes", default="1,2,4,8,16",
+                    help="comma-separated query batch sizes")
+    ap.add_argument("--reps", type=int, default=3)
+    add_tiny_arg(ap)
+    add_json_arg(ap)
+    args = ap.parse_args()
+    apply_tiny(args)
+    rows = run(tuple(args.retrievers.split(",")),
+               tuple(int(x) for x in args.sizes.split(",")), args.reps)
+    if args.json is not None:
+        write_json("batch_retrieval", {
+            "config": dict(retrievers=args.retrievers, sizes=args.sizes,
+                           reps=args.reps, tiny=args.tiny),
+            "rows": rows_to_json(rows)}, args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -38,7 +38,7 @@ from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
 from repro.serving.fleet import FleetServer  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
-from common import warm_engine  # noqa: E402
+from common import add_json_arg, warm_engine, write_json  # noqa: E402
 
 # long/short interleaved: arrival-order groups of S mix lengths, so fixed
 # grouping pads every short request out to a long neighbor's finish — the
@@ -88,6 +88,7 @@ def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
           f"s={stride}) ==")
     print(f"{'rate':>6} {'sched':>11} {'tok/s (modeled)':>16} "
           f"{'tok/s (wall)':>13} {'p50':>8} {'p99':>8} {'makespan':>9}")
+    rows = []
     for rate in rates:
         arrivals = make_arrivals(n_requests, rate, seed=seed)
         cr = cont.serve(as_requests(prompts, arrivals, budgets))
@@ -103,6 +104,18 @@ def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
               f"{percentile(fx['lats'], 99):>7.2f}s {fx['makespan']:>8.2f}s")
         print(f"{'':>6} {'':>11} continuous/fixed modeled throughput "
               f"x{tp_c / max(tp_f, 1e-9):.2f}")
+        rows.append(dict(
+            rate=rate,
+            continuous=dict(tokps_modeled=tp_c,
+                            tokps_wall=cr.throughput(modeled=False),
+                            p50_s=cr.p50, p99_s=cr.p99,
+                            makespan_s=cr.analytic_time),
+            fixed=dict(tokps_modeled=tp_f,
+                       tokps_wall=fx["tokens"] / max(fx["wall"], 1e-9),
+                       p50_s=percentile(fx["lats"], 50),
+                       p99_s=percentile(fx["lats"], 99),
+                       makespan_s=fx["makespan"])))
+    return rows
 
 
 def main() -> None:
@@ -117,12 +130,22 @@ def main() -> None:
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--stride", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    add_json_arg(ap)
     args = ap.parse_args()
     rates = [float(x) for x in args.rates.split(",")]
     names = ["edr", "adr", "sr"] if args.retriever == "all" else [args.retriever]
+    results = {}
     for name in names:
-        bench_one(name, rates, args.slots, args.requests, args.max_new,
-                  args.n_docs, args.stride, args.seed)
+        results[name] = bench_one(name, rates, args.slots, args.requests,
+                                  args.max_new, args.n_docs, args.stride,
+                                  args.seed)
+    if args.json is not None:
+        write_json("continuous", {
+            "config": dict(rates=rates, slots=args.slots,
+                           requests=args.requests, max_new=args.max_new,
+                           n_docs=args.n_docs, stride=args.stride,
+                           seed=args.seed),
+            "results": results}, args.json)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,7 @@ from repro.serving.batched import BatchedServeEngine  # noqa: E402
 from repro.serving.fleet import FleetServer  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
-from common import warm_engine  # noqa: E402
+from common import add_json_arg, warm_engine, write_json  # noqa: E402
 
 
 def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
@@ -66,10 +66,12 @@ def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
         lat = tot_an / max(-(-len(prompts) // c), 1)
         print(f"{c:>4} {tp_m:>16.1f} {tp_w:>13.1f} {lat:>17.3f}s "
               f"{calls:>9} {queries / max(calls, 1):>7.1f}")
-        rows.append((c, tp_m, tp_w, lat))
+        rows.append(dict(concurrency=c, tokps_modeled=tp_m, tokps_wall=tp_w,
+                         latency_modeled_s=lat, kb_calls=calls,
+                         kb_queries=queries))
         if base is None:
             base = tp_m
-    best = max(r[1] for r in rows)
+    best = max(r["tokps_modeled"] for r in rows)
     print(f"   modeled-throughput scaling x{best / max(base, 1e-9):.2f} "
           f"(c={levels[0]} -> best)")
     return rows
@@ -85,12 +87,20 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--n-docs", type=int, default=20000)
     ap.add_argument("--stride", type=int, default=3)
+    add_json_arg(ap)
     args = ap.parse_args()
     levels = [int(x) for x in args.concurrency.split(",")]
     names = ["edr", "adr", "sr"] if args.retriever == "all" else [args.retriever]
+    results = {}
     for name in names:
-        bench_one(name, levels, args.requests, args.max_new, args.n_docs,
-                  args.stride)
+        results[name] = bench_one(name, levels, args.requests, args.max_new,
+                                  args.n_docs, args.stride)
+    if args.json is not None:
+        write_json("fleet", {
+            "config": dict(concurrency=levels, requests=args.requests,
+                           max_new=args.max_new, n_docs=args.n_docs,
+                           stride=args.stride),
+            "results": results}, args.json)
 
 
 if __name__ == "__main__":

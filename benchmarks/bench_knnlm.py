@@ -21,8 +21,9 @@ import dataclasses  # noqa: E402
 
 import jax  # noqa: E402
 
-from benchmarks.common import (VOCAB, csv_row, knn_stack,  # noqa: E402
-                               run_requests, speedup_pair)
+from benchmarks.common import (VOCAB, add_json_arg, add_tiny_arg,  # noqa: E402
+                               apply_tiny, csv_row, knn_stack, rows_to_json,
+                               run_requests, speedup_pair, write_json)
 from repro.configs import RaLMConfig, get_config, reduced  # noqa: E402
 from repro.core.knnlm import KNNLMSeq, KNNLMSpec  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
@@ -77,5 +78,19 @@ if __name__ == "__main__":
                     help="shard count for --backend sharded (0 = one shard "
                          "per visible device; N > 1 on CPU forces an "
                          "N-device host platform before jax initializes)")
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--ks", default="1,8,64",
+                    help="comma-separated neighbour counts")
+    add_tiny_arg(ap)
+    add_json_arg(ap)
     args = ap.parse_args()
-    run(backend=args.backend, mesh_shards=args.mesh_shards)
+    apply_tiny(args)
+    rows = run(n_requests=args.requests,
+               ks=tuple(int(x) for x in args.ks.split(",")),
+               backend=args.backend, mesh_shards=args.mesh_shards)
+    if args.json is not None:
+        write_json("knnlm", {
+            "config": dict(requests=args.requests, ks=args.ks,
+                           backend=args.backend,
+                           mesh_shards=args.mesh_shards, tiny=args.tiny),
+            "rows": rows_to_json(rows)}, args.json)

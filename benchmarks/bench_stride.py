@@ -2,12 +2,20 @@
 prefer big strides, cheap ones small strides, OS3 adapts."""
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import os
+import sys
 
-from benchmarks.common import (bench_prompts, csv_row, host_lm, make_retriever,
-                               run_requests, speedup_pair, variant_rcfg)
-from repro.core.ralmspec import RaLMSeq, RaLMSpec
-from repro.serving.engine import ServeEngine
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (add_json_arg, add_tiny_arg,  # noqa: E402
+                               apply_tiny, bench_prompts, csv_row, host_lm,
+                               make_retriever, rows_to_json, run_requests,
+                               speedup_pair, variant_rcfg, write_json)
+from repro.core.ralmspec import RaLMSeq, RaLMSpec  # noqa: E402
+from repro.serving.engine import ServeEngine  # noqa: E402
 
 
 def run(n_requests: int = 3, retrievers=("edr", "adr", "sr")) -> list:
@@ -31,5 +39,22 @@ def run(n_requests: int = 3, retrievers=("edr", "adr", "sr")) -> list:
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--retrievers", default="edr,adr,sr",
+                    help="comma-separated subset of edr,adr,sr")
+    add_tiny_arg(ap)
+    add_json_arg(ap)
+    args = ap.parse_args()
+    apply_tiny(args)
+    rows = run(args.requests, tuple(args.retrievers.split(",")))
+    if args.json is not None:
+        write_json("stride", {
+            "config": dict(requests=args.requests,
+                           retrievers=args.retrievers, tiny=args.tiny),
+            "rows": rows_to_json(rows)}, args.json)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -159,6 +159,35 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
+def add_tiny_arg(ap) -> None:
+    """Shared smoke-test flag: ``--tiny`` shrinks the module-level corpus /
+    datastore sizes so every bench runs end to end in seconds (the CI
+    bench-smoke job). Numbers from a tiny run are NOT paper-comparable —
+    it exists to keep the BENCH_*.json producers from silently rotting."""
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test sizes: tiny shared corpora/stacks "
+                         "(schema checks only; timings not comparable)")
+
+
+def apply_tiny(args) -> None:
+    """Apply ``--tiny`` by rebinding the stack-size globals the builders read
+    at call time (cache keys include the sizes, so tiny and full stacks never
+    collide in .bench_cache)."""
+    global N_DOCS_DENSE, N_DOCS_SPARSE, KNN_ENTRIES, KNN_DIM, ENC_DIM
+    if getattr(args, "tiny", False):
+        N_DOCS_DENSE, N_DOCS_SPARSE = 1500, 600
+        KNN_ENTRIES, KNN_DIM, ENC_DIM = 3000, 32, 64
+
+
+def rows_to_json(rows) -> list:
+    """csv_row strings -> JSON row dicts (name, us_per_call, derived)."""
+    out = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        out.append(dict(name=name, us_per_call=float(us), derived=derived))
+    return out
+
+
 def add_json_arg(ap) -> None:
     """Shared machine-readable-output flag: ``--json`` writes the benchmark's
     results to ``BENCH_<name>.json`` at the repo root (or to an explicit

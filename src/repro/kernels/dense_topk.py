@@ -13,6 +13,14 @@ FAISS's GPU brute-force scan becomes a single fused kernel that
 
 Grid: one dimension over KB tiles. The query block is small (B ≤ 128 rows padded to
 8/128 lanes) and stays resident in VMEM for every grid step.
+
+The GATHERED variant (:func:`gathered_topk_pallas`) is the ADR/IVF form of the
+same scan: instead of every KB row, query b scores only its probed buckets'
+members, handed in as a pre-gathered (B, C, d) candidate-embedding tensor plus
+the (B, C) candidate-id matrix (-1 = padding). Pad slots are masked to the NEG
+sentinel before the streaming top-k, so they can never displace a real
+candidate; candidate columns arrive id-sorted (the backend contract), which
+makes the kernel's first-position tie break the canonical id-ascending order.
 """
 from __future__ import annotations
 
@@ -26,7 +34,13 @@ NEG = -3.4e38
 
 
 def _select_topk(scores, ids, k: int):
-    """K rounds of (max, argmax, mask) over axis 1. scores (B, M) f32, ids (B, M)."""
+    """K rounds of (max, argmax, mask) over axis 1. scores (B, M) f32, ids (B, M).
+
+    An extracted slot's ID is masked to -1 along with its score: once a row
+    runs out of real candidates (gathered scans with fewer than k real
+    candidates), every further round re-picks an all-NEG position, and it
+    must surface as the (-1, NEG) pad sentinel — not echo the id it extracted
+    on an earlier grid step."""
     B = scores.shape[0]
     out_s = []
     out_i = []
@@ -35,9 +49,10 @@ def _select_topk(scores, ids, k: int):
         a = jnp.argmax(scores, axis=1)                    # (B,)
         out_s.append(m)
         out_i.append(jnp.take_along_axis(ids, a[:, None], axis=1)[:, 0])
-        scores = jnp.where(
-            jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) == a[:, None],
-            NEG, scores)
+        picked = (jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+                  == a[:, None])
+        scores = jnp.where(picked, NEG, scores)
+        ids = jnp.where(picked, -1, ids)
     return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
 
 
@@ -69,6 +84,79 @@ def _topk_kernel(q_ref, kb_ref, out_s_ref, out_i_ref, run_s, run_i, *,
     def _done():
         out_s_ref[...] = run_s[...]
         out_i_ref[...] = run_i[...]
+
+
+def _gathered_topk_kernel(q_ref, emb_ref, cand_ref, out_s_ref, out_i_ref,
+                          run_s, run_i, *, k: int):
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...]                                        # (B, d)
+    emb = emb_ref[...]                                    # (B, block_c, d)
+    ids = cand_ref[...]                                   # (B, block_c)
+    # per-row batched dot: q[b] . emb[b, c] on the MXU
+    s = jax.lax.dot_general(q, emb, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # (B, block_c)
+    # mask candidate padding (id -1) — pad slots keep id -1 through _select_topk
+    s = jnp.where(ids >= 0, s, NEG)
+    merged_s = jnp.concatenate([run_s[...], s], axis=1)   # (B, k + block_c)
+    merged_i = jnp.concatenate([run_i[...], ids], axis=1)
+    top_s, top_i = _select_topk(merged_s, merged_i, k)
+    run_s[...] = top_s
+    run_i[...] = top_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def gathered_topk_pallas(queries: jax.Array, cand_emb: jax.Array,
+                         cand: jax.Array, k: int, *, block_c: int = 512,
+                         interpret: bool = False):
+    """queries (B, d) f32; cand_emb (B, C, d) f32; cand (B, C) int32 (-1 pad)
+    -> (scores (B, k), ids (B, k)); pad slots surface as (NEG, -1)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, d = queries.shape
+    C = cand.shape[1]
+    # lane-aligned tile, never tiny: round C up to the 128-lane grid before
+    # clamping so a 129..511-wide probe still gets an aligned block
+    block_c = max(min(block_c, -(-C // 128) * 128), 128)
+    nb = -(-C // block_c)
+    pad = nb * block_c - C
+    if pad:
+        cand_emb = jnp.pad(cand_emb, ((0, 0), (0, pad), (0, 0)))
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+
+    kernel = functools.partial(_gathered_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j: (0, 0)),           # queries resident
+            pl.BlockSpec((B, block_c, d), lambda j: (0, j, 0)),  # cand tiles
+            pl.BlockSpec((B, block_c), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, k), jnp.float32),
+            pltpu.VMEM((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, cand_emb, cand)
 
 
 def dense_topk_pallas(queries: jax.Array, kb: jax.Array, k: int, *,

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.dense_topk import dense_topk_pallas
+from repro.kernels.dense_topk import dense_topk_pallas, gathered_topk_pallas
 
 
 def _interpret() -> bool:
@@ -28,6 +28,25 @@ def dense_topk(queries: jax.Array, kb: jax.Array, k: int,
     if force_ref:
         return ref.dense_topk_ref(queries, kb, k)
     return dense_topk_pallas(queries, kb, k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "force_ref"))
+def gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array, k: int,
+                  force_ref: bool = False):
+    """Masked/gathered dense retrieval (the ADR/IVF probe): query b scores
+    only the KB rows named by cand[b] ((B, C) int32, -1 = padding). The
+    candidate-embedding gather runs on device against the resident KB; pad
+    slots come back as (NEG sentinel, -1).
+
+    The gather materializes (B, C, d) in HBM before the kernel streams it
+    (unlike the numpy path, which chunks rows to bound host scratch) —
+    acceptable while B*C*d stays well under the KB's own footprint; tiling
+    the gather into the pallas grid is the known next step for huge-probe
+    regimes."""
+    emb = jnp.take(kb, jnp.maximum(cand, 0), axis=0)     # (B, C, d)
+    if force_ref:
+        return ref.gathered_topk_ref(queries, emb, cand, k)
+    return gathered_topk_pallas(queries, emb, cand, k, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("force_ref",))

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dense_topk import NEG
+
 
 def dense_topk_ref(queries: jax.Array, kb: jax.Array, k: int):
     """queries (B, d); kb (N, d) -> (scores (B, k), ids (B, k))."""
@@ -11,6 +13,19 @@ def dense_topk_ref(queries: jax.Array, kb: jax.Array, k: int):
                    kb.astype(jnp.float32))
     scores, ids = jax.lax.top_k(s, k)
     return scores, ids.astype(jnp.int32)
+
+
+def gathered_topk_ref(queries: jax.Array, cand_emb: jax.Array,
+                      cand: jax.Array, k: int):
+    """queries (B, d); cand_emb (B, C, d); cand (B, C) int32, -1 = padding
+    -> (scores (B, k), ids (B, k)); pad slots surface as (NEG sentinel, -1).
+    Candidate columns arrive id-sorted, so lax.top_k's first-position tie
+    break is the canonical id-ascending order."""
+    s = jnp.einsum("bd,bcd->bc", queries.astype(jnp.float32),
+                   cand_emb.astype(jnp.float32))
+    s = jnp.where(cand >= 0, s, NEG)
+    scores, pos = jax.lax.top_k(s, k)
+    return scores, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
 
 
 def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

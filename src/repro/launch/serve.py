@@ -29,17 +29,24 @@ verification KB call runs on a worker thread while the fleet speculates the
 next lockstep stride, with per-slot carry/invalidation — the paper's +A,
 fleet-wide. A variant containing 'a' implies it.
 
-``--retriever-backend {numpy,kernel,sharded}`` picks EDR's execution backend
-(`repro.retrieval.backends`): the flat numpy scan, the Pallas blocked top-k
-(`kernels/dense_topk`, interpret mode on CPU, Mosaic on TPU; KB resident on
-device), or the mesh-sharded scan (`retrieval/sharded.py`) where every merged
-verification round is ONE collective over the KB shards. ``--mesh-shards N``
-sets the shard count — on a CPU host it forces an N-device host platform
-(XLA_FLAGS, applied below before jax initializes), simulating the multi-chip
-layout the sharded backend targets:
+``--retriever-backend {numpy,kernel,sharded}`` picks the dense retrievers'
+execution backend (`repro.retrieval.backends`): the flat numpy scan, the
+Pallas blocked top-k (`kernels/dense_topk`, interpret mode on CPU, Mosaic on
+TPU; KB resident on device), or the mesh-sharded scan (`retrieval/sharded.py`)
+where every merged verification round is ONE collective over the KB shards.
+EDR delegates its full scan (``search``); ADR delegates its IVF bucket scan
+(``search_gathered`` — centroid scoring stays host-side, so the merged ADR
+probe is still one collective on the sharded backend). SR has a single
+execution strategy (see ``BACKEND_SUPPORT``). ``--mesh-shards N`` sets the
+shard count — on a CPU host it forces an N-device host platform (XLA_FLAGS,
+applied below before jax initializes), simulating the multi-chip layout the
+sharded backend targets:
 
     PYTHONPATH=src python -m repro.launch.serve --concurrency 4 \
         --retriever-backend sharded --mesh-shards 4 --requests 4
+
+    PYTHONPATH=src python -m repro.launch.serve --retriever adr \
+        --retriever-backend sharded --mesh-shards 4 --concurrency 4 --requests 4
 """
 from __future__ import annotations
 
@@ -69,15 +76,31 @@ from repro.serving.fleet import FleetServer
 from repro.training.data import make_queries, synthetic_corpus
 
 
+# which execution backends each retriever supports — the ONE table the CLI
+# validation, the drivers, and the docs all mean. EDR delegates its full scan
+# and ADR its IVF bucket scan to `repro.retrieval.backends`; SR's BM25 term
+# scan has a single (numpy) execution strategy.
+BACKEND_SUPPORT = {
+    "edr": ("numpy", "kernel", "sharded"),
+    "adr": ("numpy", "kernel", "sharded"),
+    "sr": ("numpy",),
+}
+
+
 def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-medium",
                 backend: str = "numpy", mesh_shards: int = 0, seed: int = 0,
                 enc_dim: int = 64, d_model: int = 256):
     """Model + corpus + retriever for the serving drivers and benchmarks.
-    ``backend`` picks EDR's execution backend (`repro.retrieval.backends`:
-    'numpy' / 'kernel' / 'sharded'); ``mesh_shards`` caps the sharded
+    ``backend`` picks the dense retrievers' execution backend
+    (`repro.retrieval.backends`: 'numpy' / 'kernel' / 'sharded' — EDR's full
+    scan and ADR's IVF bucket scan alike); ``mesh_shards`` caps the sharded
     backend's shard count (0 = one shard per visible device);
     ``enc_dim``/``d_model`` let benchmarks tune the retrieval-vs-LM cost
     ratio (bench_async_fleet needs retrieval-heavy EDR)."""
+    if backend not in BACKEND_SUPPORT.get(retriever, ()):
+        raise ValueError(
+            f"retriever {retriever!r} does not support backend {backend!r} "
+            f"(supported: {', '.join(BACKEND_SUPPORT.get(retriever, ()))})")
     cfg = reduced(get_config(arch), layers=2, d_model=d_model)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
@@ -90,7 +113,8 @@ def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-m
         kb = DenseKB.build(docs, enc)
         retr = (ExactDenseRetriever(kb, backend=backend,
                                     mesh_shards=mesh_shards)
-                if retriever == "edr" else IVFRetriever(kb))
+                if retriever == "edr" else
+                IVFRetriever(kb, backend=backend, mesh_shards=mesh_shards))
     return cfg, model, params, docs, enc, retr
 
 
@@ -143,10 +167,11 @@ def main() -> None:
                          "implied by a variant containing 'a')")
     ap.add_argument("--retriever-backend",
                     choices=["numpy", "kernel", "sharded"], default="numpy",
-                    help="EDR scoring backend: numpy flat scan, the Pallas "
-                         "blocked top-k kernel (interpret mode on CPU), or "
-                         "the mesh-sharded scan (one collective per merged "
-                         "verification round)")
+                    help="dense scoring backend (EDR full scan / ADR bucket "
+                         "scan): numpy, the Pallas top-k kernel (interpret "
+                         "mode on CPU), or the mesh-sharded scan (one "
+                         "collective per merged verification round). SR "
+                         "supports numpy only")
     ap.add_argument("--mesh-shards", type=int, default=0,
                     help="shard count for --retriever-backend sharded "
                          "(0 = one shard per visible device; on CPU, N > 1 "
@@ -161,21 +186,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed for Poisson arrivals")
     args = ap.parse_args()
-    if args.retriever != "edr" and args.retriever_backend != "numpy":
-        # fail loudly rather than silently measuring the wrong scan: only the
-        # exact dense retriever delegates to the backend layer today
-        ap.error(f"--retriever-backend {args.retriever_backend} applies to "
-                 "--retriever edr only (ADR/SR have a single execution "
-                 "strategy each)")
+    if args.retriever_backend not in BACKEND_SUPPORT[args.retriever]:
+        # fail loudly rather than silently measuring the wrong scan; the one
+        # table above names what each retriever can execute on
+        ap.error(f"--retriever {args.retriever} does not support "
+                 f"--retriever-backend {args.retriever_backend} (supported: "
+                 f"{', '.join(BACKEND_SUPPORT[args.retriever])})")
 
     cfg, model, params, docs, enc, retr = build_stack(
         args.retriever, n_docs=args.n_docs, backend=args.retriever_backend,
         mesh_shards=args.mesh_shards)
-    if args.retriever == "edr" and args.retriever_backend != "numpy":
+    if args.retriever_backend != "numpy":
         b = retr.backend
         detail = (f"{b.n_shards} shard(s), one collective per KB call"
                   if b.name == "sharded" else "device-resident KB")
-        print(f"EDR backend: {b.name} ({detail})")
+        print(f"{args.retriever.upper()} backend: {b.name} ({detail})")
     rcfg = variant_config(args.variant.replace("-", ""),
                           RaLMConfig(max_new_tokens=args.max_new,
                                      speculation_stride=args.stride))
@@ -242,9 +267,10 @@ def main() -> None:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
         print(f"outputs identical: {same}   "
               f"speed-up {results['seq'][0] / max(results['spec'][0], 1e-9):.2f}x")
-    if args.retriever == "edr" and retr.backend.name == "sharded":
+    if getattr(getattr(retr, "backend", None), "name", "") == "sharded":
         # the merge invariant, visible: every KB call (seed or merged
-        # verification round) executed as exactly one sharded collective
+        # verification round — EDR scan or ADR probe) executed as exactly one
+        # sharded collective
         print(f"sharded collectives: {retr.backend.calls}  "
               f"KB calls: {retr.stats.calls}  (1 collective per call)")
 

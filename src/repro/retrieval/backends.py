@@ -15,7 +15,18 @@ scan executes is a serving-level decision, not a retriever-level one:
                               merged verification round is a single collective
                               program however many requests participate.
 
-All three return identical ``(ids, scores)`` under the CANONICAL tie order —
+Each backend offers TWO scans over the same resident KB:
+
+  * :meth:`~DenseSearchBackend.search` — the full scan (EDR / KNN-LM): every
+    KB row scored against every query.
+  * :meth:`~DenseSearchBackend.search_gathered` — the masked/gathered scan
+    (ADR): each query scores only ITS candidate rows, given as a fixed-shape
+    padded id matrix (the IVF probe's bucket gather). Pad slots are ``-1``
+    and score ``-inf``; the sharded backend scans only the candidates
+    resident on each shard, so a fleet round's merged ADR probe is still ONE
+    collective (centroid scoring stays host-side in the retriever).
+
+All scans return identical ``(ids, scores)`` under the CANONICAL tie order —
 score descending, then id ascending — so the serving layers can swap backends
 without perturbing a single served token (tests/test_backends.py asserts
 byte-identity across batch sizes, k values, tie-heavy KBs, and KB sizes that
@@ -76,10 +87,29 @@ class DenseSearchBackend(Protocol):
         rows sorted canonically: score desc, ties by id asc."""
         ...
 
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Masked/gathered scan: query b scores only the KB rows named by
+        ``cand[b]`` (the IVF probe's padded bucket gather).
+
+        ``cand`` is (B, C) int64: each row's candidate doc ids, sorted
+        ascending, unique, padded with ``-1`` at the END (the retriever
+        normalizes probe-order gathers into this form once — with ids in
+        column order, every backend's position-stable top-k IS the canonical
+        id-asc tie break). Returns ``(ids (B, k'), scores (B, k'))`` with
+        ``k' = min(k, C)``, canonically ordered; slots beyond a row's real
+        candidate count come back as ``(id=-1, score=-inf)``."""
+        ...
+
     def cold_shape(self, B: int, k: int) -> bool:
         """True iff the NEXT search at this shape pays an XLA compile (and
         records the shape as seen). The compile cache lives on the backend,
         so retrievers sharing one backend agree on what is warm."""
+        ...
+
+    def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
+        """`cold_shape` for the gathered scan — its compiled program is also
+        shaped by the candidate width ``C``."""
         ...
 
 
@@ -94,6 +124,13 @@ class _JitShapeMixin:
 
     def cold_shape(self, B: int, k: int) -> bool:
         key = (B, min(k, self._n_rows))
+        if key in self._shapes:
+            return False
+        self._shapes.add(key)
+        return True
+
+    def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
+        key = (B, C, min(k, C))          # 3-tuples: never collide with dense
         if key in self._shapes:
             return False
         self._shapes.add(key)
@@ -131,6 +168,32 @@ def canonical_topk(s: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
     return ids, np.take_along_axis(part, order, axis=1).astype(np.float32)
 
 
+def gathered_scores(embeddings: np.ndarray, queries: np.ndarray,
+                    cand: np.ndarray) -> np.ndarray:
+    """Score each query against ITS candidate rows: ``(B, C)`` float32 with
+    pad slots (``cand < 0``) at ``-inf``. Row-chunked so the ``(rows, C, d)``
+    gather stays ~64MB — big-KB probes would otherwise materialize GB-scale
+    scratch per merged verification call. ``np.matmul`` over a stacked batch
+    is per-row deterministic, so chunking cannot change a single bit."""
+    B, C = cand.shape
+    d = embeddings.shape[1]
+    s = np.empty((B, C), np.float32)
+    step = max(1, 16_000_000 // max(C * d, 1))
+    for i in range(0, B, step):
+        emb = embeddings[np.maximum(cand[i:i + step], 0)]
+        s[i:i + step] = np.matmul(emb, queries[i:i + step, :, None])[..., 0]
+    return np.where(cand >= 0, s, -np.inf)
+
+
+def _sentinels_to_contract(ids, scores) -> Tuple[np.ndarray, np.ndarray]:
+    """Device gathered-scan output -> the search_gathered contract: pad slots
+    carry the NEG sentinel on device (kernels/dense_topk.NEG) with id -1;
+    the contract (and the numpy path) says (id=-1, score=-inf)."""
+    ids = np.asarray(ids, np.int64)
+    return ids, np.where(ids < 0, np.float32(-np.inf),
+                         np.asarray(scores, np.float32))
+
+
 class FlatBackend:
     """Single-host numpy scan: one BLAS matmul + canonical argpartition top-k."""
 
@@ -143,10 +206,25 @@ class FlatBackend:
     def cold_shape(self, B: int, k: int) -> bool:
         return False                     # nothing compiles
 
+    def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
+        return False
+
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         s = queries @ self.embeddings.T                  # (B, N)
         self.calls += 1
         return canonical_topk(s, k)
+
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        s = gathered_scores(self.embeddings, queries, cand)
+        k2 = min(k, cand.shape[1])
+        # cand columns are id-sorted with pads (-inf) last, so a stable sort
+        # on score alone IS the canonical order — and pads can never displace
+        # real candidates
+        order = np.argsort(-s, axis=1, kind="stable")[:, :k2]
+        ids = np.take_along_axis(cand, order, axis=1).astype(np.int64)
+        self.calls += 1
+        return ids, np.take_along_axis(s, order, axis=1).astype(np.float32)
 
 
 class KernelBackend(_JitShapeMixin):
@@ -162,8 +240,9 @@ class KernelBackend(_JitShapeMixin):
     def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
         import jax
 
-        from repro.kernels.ops import dense_topk
+        from repro.kernels.ops import dense_topk, gathered_topk
         self._fn = dense_topk
+        self._fn_gathered = gathered_topk
         self._force_ref = force_ref
         self._kb = jax.device_put(np.asarray(embeddings, np.float32))
         self.calls = 0
@@ -178,6 +257,17 @@ class KernelBackend(_JitShapeMixin):
                                force_ref=self._force_ref)
         self.calls += 1
         return np.asarray(ids, np.int64), np.asarray(scores, np.float32)
+
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        scores, ids = self._fn_gathered(jnp.asarray(queries, jnp.float32),
+                                        self._kb,
+                                        jnp.asarray(cand, jnp.int32),
+                                        min(k, cand.shape[1]),
+                                        force_ref=self._force_ref)
+        self.calls += 1
+        return _sentinels_to_contract(ids, scores)
 
 
 class ShardedBackend(_JitShapeMixin):
@@ -197,7 +287,8 @@ class ShardedBackend(_JitShapeMixin):
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        from repro.retrieval.sharded import sharded_dense_topk
+        from repro.retrieval.sharded import (sharded_dense_topk,
+                                             sharded_gathered_topk)
         if mesh is None:
             devs = jax.devices()
             n = len(devs) if not n_shards else min(n_shards, len(devs))
@@ -222,7 +313,13 @@ class ShardedBackend(_JitShapeMixin):
             return sharded_dense_topk(q, kb, k, self.mesh, axis=self.axis,
                                       n_total=self.n_total)
 
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def _scan_gathered(q, kb, cand, k):
+            return sharded_gathered_topk(q, kb, cand, k, self.mesh,
+                                         axis=self.axis, n_total=self.n_total)
+
         self._scan = _scan
+        self._scan_gathered = _scan_gathered
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
@@ -233,6 +330,18 @@ class ShardedBackend(_JitShapeMixin):
                                       self._kb, min(k, self.n_total))
         self.calls += 1
         return np.asarray(gids, np.int64), np.asarray(scores, np.float32)
+
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+
+        from repro.retrieval.sharded import mesh_context
+        with mesh_context(self.mesh):
+            scores, gids = self._scan_gathered(
+                jnp.asarray(queries, jnp.float32), self._kb,
+                jnp.asarray(cand, jnp.int32), min(k, cand.shape[1]))
+        self.calls += 1
+        return _sentinels_to_contract(gids, scores)
 
 
 BACKENDS = ("numpy", "kernel", "sharded")

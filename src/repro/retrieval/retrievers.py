@@ -12,6 +12,10 @@
                                  k-means coarse quantizer + nprobe cluster scan.
                                  Cheap, less accurate, latency ~ linear in batch with
                                  an intercept — matching the paper's §A.1 measurement.
+                                 Centroid scoring stays host-side; the per-bucket
+                                 document scan delegates to the same backend layer
+                                 as EDR (`search_gathered`: numpy / Pallas kernel /
+                                 sharded mesh — one collective per merged probe).
   * BM25Retriever        (SR)  — bag-of-words over the SparseKB.
 
 All retrievers expose:  retrieve(queries, k) -> (ids (B,k) int64, scores (B,k)).
@@ -158,13 +162,26 @@ class ExactDenseRetriever(_TimedRetriever):
 
 
 class IVFRetriever(_TimedRetriever):
+    """ADR: k-means coarse quantizer (host-side centroid scan) + nprobe bucket
+    scan, the document scoring of which is delegated to the backend layer —
+    the same three execution strategies as EDR, via
+    :meth:`~repro.retrieval.backends.DenseSearchBackend.search_gathered` over
+    the fixed-shape padded bucket gather. ``backend`` / ``mesh_shards`` mean
+    exactly what they do on :class:`ExactDenseRetriever`; with 'sharded', a
+    fleet round's merged ADR probe is ONE collective over the KB shards."""
+
     name = "ADR"
 
     def __init__(self, kb: DenseKB, n_clusters: int = 64, nprobe: int = 4,
-                 iters: int = 8, seed: int = 3):
+                 iters: int = 8, seed: int = 3, backend="numpy",
+                 mesh_shards: int = 0):
         self.kb = kb
         self.nprobe = nprobe
         self.stats = RetrieverStats("linear_intercept")
+        self.backend: DenseSearchBackend = (
+            backend if not isinstance(backend, str)
+            else make_backend(backend, kb.embeddings,
+                              n_shards=mesh_shards or None))
         g = np.random.default_rng(seed)
         X = kb.embeddings
         self.centroids = X[g.choice(X.shape[0], n_clusters, replace=False)].copy()
@@ -191,20 +208,36 @@ class IVFRetriever(_TimedRetriever):
         self._bucket_len = np.asarray([len(bk) for bk in self.buckets],
                                       np.int64)
 
-    def _search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Vectorized nprobe scan: padded fixed-shape candidate gather + ONE
-        batched matmul over the whole query batch (no per-query Python loop).
-
-        Semantics match the scalar scan exactly: candidates are the probed
-        buckets' members in probe order, ties break stably by that candidate
-        order, queries whose probes come up empty fall back to the first
-        ``min(k, kb.size)`` docs, and rows with fewer than k candidates pad by
-        repeating their last real (id, score). Because the padded shape is
-        fixed by the index (nprobe x Lmax), a batched call is byte-identical
-        to the same queries issued one at a time
-        (tests/test_retrievers.py::test_batched_equals_sequential)."""
+    def _ensure_exec(self) -> None:
+        """Backfill execution state on instances restored without __init__
+        (benchmarks/common.py rebuilds cached IVF indices via __new__)."""
         if not hasattr(self, "_bucket_pad"):   # caches built pre-vectorization
             self._build_pads()
+        if not hasattr(self, "backend"):
+            self.backend = make_backend("numpy", self.kb.embeddings)
+
+    def _cand_width(self, k: int) -> int:
+        """The fixed candidate width C the gathered scan compiles for:
+        nprobe x Lmax from the index, widened to k so fallback/pad slots fit.
+        (nprobe clamps to the cluster count, as the probe's argsort slice
+        does implicitly.)"""
+        nprobe = min(self.nprobe, len(self.buckets))
+        return max(self._bucket_pad.shape[1] * nprobe,
+                   max(min(k, self.kb.size), 1), k)
+
+    def _cold_shape(self, B: int, k: int) -> bool:
+        self._ensure_exec()
+        return self.backend.cold_shape_gathered(B, self._cand_width(k), k)
+
+    def _gather_candidates(self, queries: np.ndarray,
+                           k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side probe: score centroids, gather the probed buckets' padded
+        id rows into the fixed-shape (B, C) candidate matrix, then normalize
+        each row to the backend contract — ids sorted ascending, -1 pads last
+        (id-sorted columns are what make every backend's positional tie break
+        the canonical id-ascending order). Queries whose probes come up empty
+        fall back to the first ``min(k, kb.size)`` docs. Returns
+        ``(cand, counts)``; counts = real candidates per row."""
         B = queries.shape[0]
         cs = np.argsort(-(queries @ self.centroids.T), axis=1)[:, :self.nprobe]
         cand = self._bucket_pad[cs].reshape(B, -1)        # (B, nprobe*Lmax)
@@ -215,27 +248,34 @@ class IVFRetriever(_TimedRetriever):
                           constant_values=-1)
         empty = counts == 0
         if empty.any():                                   # fallback candidates
+            cand[empty] = -1
             cand[empty, :F] = np.arange(F)
             counts = np.where(empty, F, counts)
-        valid = cand >= 0
-        # batched matmul over the gathered candidates, row-chunked so the
-        # (rows, C, d) gather stays ~64MB — big-KB probes would otherwise
-        # materialize GB-scale scratch per merged verification call. np.matmul
-        # over a stacked batch is per-row deterministic, so chunking cannot
-        # change a single bit of the result.
-        C, d = cand.shape[1], self.kb.embeddings.shape[1]
-        s = np.empty((B, C), np.float32)
-        step = max(1, 16_000_000 // max(C * d, 1))
-        for i in range(0, B, step):
-            emb = self.kb.embeddings[np.maximum(cand[i:i + step], 0)]
-            s[i:i + step] = np.matmul(
-                emb, queries[i:i + step, :, None])[..., 0]
-        s = np.where(valid, s, -np.inf)                   # mask padding
-        order = np.argsort(-s, axis=1, kind="stable")[:, :k]
-        ids = np.take_along_axis(cand, order, axis=1)
-        sc = np.take_along_axis(s, order, axis=1)
-        kk = np.minimum(counts, k)                        # real hits per row
-        fill = np.arange(k)[None, :] >= kk[:, None]       # pad: repeat last
+        big = np.iinfo(np.int64).max
+        cand = np.sort(np.where(cand < 0, big, cand), axis=1)
+        cand[cand == big] = -1
+        return cand, counts
+
+    def _search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized nprobe scan, document scoring on the backend: the padded
+        fixed-shape candidate gather goes down to ``backend.search_gathered``
+        (numpy chunked matmul / Pallas gathered top-k / one sharded
+        collective), which returns the canonical (score desc, id asc) top-k
+        over each row's real candidates with (-1, -inf) pads.
+
+        Semantics beyond the backend contract live here: queries whose probes
+        come up empty fall back to the first ``min(k, kb.size)`` docs, and
+        rows with fewer than k candidates pad by repeating their last real
+        (id, score). Because the padded shape is fixed by the index
+        (nprobe x Lmax), a batched call is byte-identical to the same queries
+        issued one at a time
+        (tests/test_retrievers.py::test_batched_equals_sequential)."""
+        self._ensure_exec()
+        cand, counts = self._gather_candidates(queries, k)
+        ids, sc = self.backend.search_gathered(queries, cand, k)
+        k2 = ids.shape[1]                                 # min(k, C) == k here
+        kk = np.minimum(counts, k2)                       # real hits per row
+        fill = np.arange(k2)[None, :] >= kk[:, None]      # pad: repeat last
         last = np.maximum(kk - 1, 0)[:, None]
         ids = np.where(fill, np.take_along_axis(ids, last, axis=1), ids)
         sc = np.where(fill, np.take_along_axis(sc, last, axis=1), sc)

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-NEG = -3.4e38          # same sentinel as kernels/dense_topk
+from repro.kernels.dense_topk import NEG  # one pad sentinel, every backend
 
 # jax moved shard_map out of experimental and renamed check_rep -> check_vma;
 # support both spellings so the seed toolchain (0.4.x) and current jax run this.
@@ -108,6 +108,72 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
         **{_CHECK_KW: False},
     )
     return fn(queries, kb)
+
+
+def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
+                          k: int, mesh, axis: str = "data", *,
+                          n_total: Optional[int] = None):
+    """The ADR/IVF probe over the sharded KB: queries (B, d) and the padded
+    candidate-id matrix cand (B, C) replicated; kb (N, d) sharded over
+    ``axis``. -> (scores (B, k), global ids (B, k)); pad slots (-1 in cand,
+    or slots beyond a row's real candidate count) surface as (NEG, -1).
+
+    Each shard scores only the candidates RESIDENT in its row range (gather
+    from its slice + mask everything else to -inf), takes a per-shard top-k,
+    and the candidates all-gather + reduce exactly like the dense scan — so a
+    fleet round's merged ADR probe is still ONE collective program. The
+    canonical tie order survives because shard s owns the contiguous id range
+    [s*shard_n, (s+1)*shard_n): across shards equal scores resolve to the
+    lower shard = lower id, and within a shard cand's id-sorted columns make
+    lax.top_k's positional tie break id-ascending.
+
+    ``cand`` rows must be id-sorted with -1 pads last and contain no
+    duplicate real ids (IVF buckets partition the KB, so probe gathers
+    satisfy this by construction). Each shard materializes its (B, C, d)
+    gather in HBM before scoring — fine while B*C*d stays well under the
+    shard's KB slice; tiling C inside the shard program (still one
+    collective) is the known next step for huge-probe regimes."""
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    N = kb.shape[0]
+    if n_total is None:
+        n_total = N
+    shard_n = -(-N // n_shards)
+    pad = shard_n * n_shards - N
+    if pad:
+        kb = jnp.pad(kb, ((0, pad), (0, 0)))
+    C = cand.shape[1]
+    # any single shard may hold ALL of a row's candidates, so the per-shard
+    # contribution cannot be divided by n_shards
+    k_local = min(k, C)
+
+    def local(q, cd, kb_shard):
+        kb2 = kb_shard[0] if kb_shard.ndim == 3 else kb_shard
+        shard_idx = jax.lax.axis_index(axis)
+        lo = shard_idx * shard_n
+        own = (cd >= lo) & (cd < lo + shard_n) & (cd < n_total)
+        emb = jnp.take(kb2, jnp.clip(cd - lo, 0, shard_n - 1), axis=0)
+        s = jnp.einsum("bcd,bd->bc", emb.astype(jnp.float32),
+                       q.astype(jnp.float32))
+        s = jnp.where(own, s, NEG)
+        gids = jnp.where(own, cd, -1)          # non-resident/pad: sentinel id
+        s_l, pos = jax.lax.top_k(s, k_local)
+        g_l = jnp.take_along_axis(gids, pos, axis=1)
+        all_s = jax.lax.all_gather(s_l, axis)  # (n_shards, B, k_local)
+        all_g = jax.lax.all_gather(g_l, axis)
+        B = q.shape[0]
+        cat_s = jnp.moveaxis(all_s, 0, 1).reshape(B, n_shards * k_local)
+        cat_g = jnp.moveaxis(all_g, 0, 1).reshape(B, n_shards * k_local)
+        top_s, p = jax.lax.top_k(cat_s, k_local)
+        top_g = jnp.take_along_axis(cat_g, p, axis=1)
+        return top_s, top_g
+
+    fn = _shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(axis, None)),
+        out_specs=(P(), P()),
+        **{_CHECK_KW: False},
+    )
+    return fn(queries, cand.astype(jnp.int32), kb)
 
 
 def lower_sharded_retrieval(mesh, *, n_docs: int = 1_048_576, d: int = 256,

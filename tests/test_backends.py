@@ -19,7 +19,9 @@ import pytest
 from repro.retrieval.backends import (FlatBackend, KernelBackend,
                                       ShardedBackend, canonical_topk,
                                       make_backend)
-from repro.retrieval.retrievers import ExactDenseRetriever, RetrieverStats
+from repro.retrieval.kb import DenseKB
+from repro.retrieval.retrievers import (ExactDenseRetriever, IVFRetriever,
+                                        RetrieverStats)
 
 
 def _grid(rng, n, d):
@@ -127,6 +129,126 @@ def test_make_backend_names():
     assert make_backend("sharded", emb, n_shards=2).name == "sharded"
     with pytest.raises(KeyError):
         make_backend("faiss", emb)
+
+
+# ---------------------------------------------------------------------------------
+# ADR: the IVF probe through the same backend layer (gathered/masked scan)
+# ---------------------------------------------------------------------------------
+def _ivf_kb(emb):
+    return DenseKB(embeddings=emb, docs=[[0]] * emb.shape[0])
+
+
+def _adr_trio(emb, *, n_clusters=8, nprobe=2):
+    """Three IVFRetrievers over identical clusterings (same seed), one per
+    execution backend."""
+    kb = _ivf_kb(emb)
+    return {be: IVFRetriever(kb, n_clusters=n_clusters, nprobe=nprobe,
+                             backend=be, mesh_shards=4)
+            for be in ("numpy", "kernel", "sharded")}
+
+
+@pytest.mark.parametrize("n,d", [(96, 16), (130, 8), (257, 32)])
+@pytest.mark.parametrize("ties", [False, True])
+def test_adr_backend_parity_byte_identical(four_devices, n, d, ties):
+    """The IVF probe returns byte-identical ids AND scores on every backend —
+    across batch sizes, k values, nprobe, tie-heavy KBs, and KB sizes that
+    make bucket sizes non-divisible by anything in sight. Bucket membership
+    is fixed by the (shared-seed) clustering, so only the gathered scan's
+    execution differs."""
+    rng = np.random.default_rng(100 + n + d + ties)
+    emb = _tie_heavy(rng, n, d) if ties else _grid(rng, n, d)
+    for nprobe in (1, 3):
+        retrs = _adr_trio(emb, nprobe=nprobe)
+        assert retrs["sharded"].backend.n_shards == 4
+        for B in (1, 3, 8):
+            qs = _grid(rng, B, d)
+            for k in (1, 5, 40):
+                ni, ns = retrs["numpy"].retrieve(qs, k)
+                ki, ks = retrs["kernel"].retrieve(qs, k)
+                si, ss = retrs["sharded"].retrieve(qs, k)
+                assert ni.shape == (B, k) and ns.dtype == np.float32
+                tag = f"nprobe={nprobe} B={B} k={k}"
+                assert np.array_equal(ni, ki), f"{tag}: numpy vs kernel ids"
+                assert np.array_equal(ns, ks), f"{tag}: numpy vs kernel scores"
+                assert np.array_equal(ni, si), f"{tag}: numpy vs sharded ids"
+                assert np.array_equal(ns, ss), f"{tag}: numpy vs sharded scores"
+
+
+def test_adr_canonical_tie_order(four_devices):
+    """Score ties in the probed buckets resolve id-ASCENDING on every backend
+    (all-duplicate KB: every candidate scores identically, so the top-k must
+    be each row's lowest probed ids)."""
+    rng = np.random.default_rng(7)
+    emb = np.tile(_grid(rng, 1, 8), (64, 1))          # 64 identical rows
+    qs = _grid(rng, 4, 8)
+    want = None
+    for be, r in _adr_trio(emb, n_clusters=4, nprobe=2).items():
+        ids, sc = r.retrieve(qs, 6)
+        for b in range(4):
+            row = ids[b]
+            assert list(row) == sorted(row), f"{be}: ties not id-ascending"
+        if want is None:
+            want = ids
+        assert np.array_equal(ids, want), be
+
+
+@pytest.mark.parametrize("width", [12, 700])
+def test_adr_gathered_pad_slots_are_sentinels(four_devices, width):
+    """At the BACKEND level, slots beyond a row's real candidate count come
+    back as (id=-1, score=-inf) on every backend — the retriever's
+    repeat-last fill is layered on top, identically everywhere. width=700
+    spans multiple Pallas tiles (block_c=512): the streaming top-k must keep
+    emitting pad sentinels on later grid steps, not echo ids it already
+    extracted (regression: _select_topk once masked only the score of a
+    picked slot, so exhausted rows re-picked position 0 and duplicated the
+    running best id)."""
+    rng = np.random.default_rng(3)
+    emb = _grid(rng, 40, 8)
+    qs = _grid(rng, 2, 8)
+    cand = np.full((2, width), -1, np.int64)
+    cand[0, :5] = [2, 7, 11, 30, 39]                  # 5 real candidates
+    cand[1, :1] = [4]                                 # 1 real candidate
+    k = 8
+    for name, be in [("numpy", FlatBackend(emb)),
+                     ("kernel", KernelBackend(emb)),
+                     ("sharded", ShardedBackend(emb, n_shards=4))]:
+        ids, sc = be.search_gathered(qs, cand, k)
+        assert ids.shape == (2, 8), name
+        assert np.all(ids[0, 5:] == -1) and np.all(ids[1, 1:] == -1), name
+        assert np.all(np.isneginf(sc[0, 5:])), name
+        assert np.all(np.isneginf(sc[1, 1:])), name
+        assert np.all(ids[0, :5] >= 0) and ids[1, 0] == 4, name
+
+
+def test_adr_sharded_one_collective_per_probe(four_devices):
+    """Every ADR retrieve (the merged probe, any batch width) is exactly ONE
+    sharded collective: centroid scoring stays host-side."""
+    rng = np.random.default_rng(11)
+    r = IVFRetriever(_ivf_kb(_grid(rng, 130, 16)), n_clusters=8, nprobe=2,
+                     backend="sharded", mesh_shards=4)
+    for B in (1, 4, 7):
+        r.retrieve(_grid(rng, B, 16), 5)
+    assert r.backend.calls == 3 == r.stats.calls
+
+
+def test_adr_jitted_backend_warmup_keys_on_candidate_width():
+    """ADR's compiled probe is shaped by (B, C, k); the first call per shape
+    is flagged warmup and excluded from the latency-unit EMA, later calls at
+    the same shape are warm. The numpy backend never warms up. (kernel-only:
+    runs on the single-device CI matrix leg too.)"""
+    rng = np.random.default_rng(13)
+    kb = _ivf_kb(_grid(rng, 120, 16))
+    r = IVFRetriever(kb, n_clusters=8, nprobe=2, backend="kernel")
+    q = _grid(rng, 1, 16)
+    r.retrieve(q, 4)
+    assert r.stats.warmup_calls == 1 and r.stats.model_latency(1) == 0.0
+    r.retrieve(q, 4)                        # warm shape: calibrates now
+    assert r.stats.warmup_calls == 1 and r.stats.model_latency(1) > 0.0
+    r.retrieve(_grid(rng, 2, 16), 4)        # new batch shape: warmup again
+    assert r.stats.warmup_calls == 2
+    rn = IVFRetriever(kb, n_clusters=8, nprobe=2)
+    rn.retrieve(q, 4)
+    assert rn.stats.warmup_calls == 0 and rn.stats.model_latency(1) > 0.0
 
 
 # ---------------------------------------------------------------------------------
@@ -267,3 +389,77 @@ def test_sharded_continuous_serve_parity(four_devices, serve_stack):
     assert [r.tokens for r in cr.results] == want, \
         "sharded-backend continuous fleet diverged from per-request RaLMSeq"
     assert retr.backend.calls == retr.stats.calls
+
+
+def _adr_retr(dkb, backend="numpy"):
+    # identical clustering on every backend (shared seed); small index so the
+    # probes actually miss sometimes and rollbacks exercise the restore path
+    return IVFRetriever(dkb, n_clusters=16, nprobe=2, backend=backend,
+                        mesh_shards=4)
+
+
+def _adr_seq_tokens(serve_stack):
+    from repro.core.ralmspec import RaLMSeq
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    retr = _adr_retr(dkb)
+    return [RaLMSeq(seng, retr, _rcfg(), enc).serve(p).tokens for p in prompts]
+
+
+@pytest.mark.parametrize("async_rounds", [False, True])
+def test_adr_sharded_fleet_serve_parity(four_devices, serve_stack,
+                                        async_rounds):
+    """Fleet-served ADR through the sharded mesh == per-request RaLMSeq over
+    the numpy IVF probe, sync and async/pipelined, with exactly ONE sharded
+    collective per merged probe round (plus the one seed call) — the
+    acceptance surface for routing the IVF probe through the backend layer."""
+    from repro.serving.fleet import FleetServer
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = _adr_seq_tokens(serve_stack)
+    retr = _adr_retr(dkb, backend="sharded")
+    assert retr.backend.n_shards == 4
+    with FleetServer(beng, retr, _rcfg(), enc,
+                     async_rounds=async_rounds) as fleet:
+        fr = fleet.serve(prompts)
+    assert [r.tokens for r in fr.results] == want, \
+        "sharded-backend ADR fleet diverged from per-request RaLMSeq"
+    assert retr.backend.calls == fr.kb_calls == fr.rounds + 1
+
+
+def test_adr_sharded_continuous_serve_parity(four_devices, serve_stack):
+    """Continuous batching over the sharded ADR probe: byte-identical outputs
+    under churn, one collective per KB call."""
+    from repro.serving.continuous import ContinuousFleetServer, as_requests
+    from repro.serving.batched import BatchedServeEngine
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = _adr_seq_tokens(serve_stack)
+    retr = _adr_retr(dkb, backend="sharded")
+    eng2 = BatchedServeEngine(beng.model, beng.params, 2, cache_window=256)
+    server = ContinuousFleetServer(eng2, retr, _rcfg(), enc)
+    cr = server.serve(as_requests(prompts, [0.0, 0.0, 1.0]))
+    assert [r.tokens for r in cr.results] == want, \
+        "sharded-backend ADR continuous fleet diverged from RaLMSeq"
+    assert retr.backend.calls == retr.stats.calls
+
+
+def test_adr_kernel_fleet_serve_parity(serve_stack):
+    """The Pallas (interpret-mode) gathered scan serves the same tokens too —
+    the kernel cell of the ADR x backend matrix. (kernel-only: runs on the
+    single-device CI matrix leg too.)"""
+    from repro.serving.fleet import FleetServer
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = _adr_seq_tokens(serve_stack)
+    retr = _adr_retr(dkb, backend="kernel")
+    with FleetServer(beng, retr, _rcfg(), enc, async_rounds=False) as fleet:
+        fr = fleet.serve(prompts)
+    assert [r.tokens for r in fr.results] == want
+
+
+def test_serve_rejects_unsupported_backend_combo():
+    """build_stack enforces the same support table the CLI validates against:
+    SR alone rejects non-numpy backends."""
+    from repro.launch.serve import BACKEND_SUPPORT, build_stack
+    assert BACKEND_SUPPORT["sr"] == ("numpy",)
+    assert set(BACKEND_SUPPORT["edr"]) == set(BACKEND_SUPPORT["adr"]) \
+        == {"numpy", "kernel", "sharded"}
+    with pytest.raises(ValueError, match="does not support"):
+        build_stack("sr", n_docs=50, backend="sharded")

@@ -1,0 +1,149 @@
+"""Benchmark smoke: every benchmarks/bench_*.py runs end to end at tiny sizes
+with ``--json`` and emits a schema-valid payload (expected keys present, all
+latencies finite) — so the BENCH_*.json producers can't silently rot between
+the PRs that actually read their numbers.
+
+Marked ``bench_smoke`` and deselected from the fast tier (pytest.ini); CI runs
+this in its own bench-smoke job (.github/workflows/ci.yml).
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.bench_smoke
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# one entry per benchmark script: tiny-size args + the shape of its payload.
+# kind 'csv' = the shared csv_row schema (rows of name/us_per_call/derived);
+# the rest have bench-specific nested results, validated below.
+BENCHES = {
+    "bench_ablation.py": dict(
+        args=["--tiny", "--requests", "1", "--retrievers", "edr",
+              "--variants", ",p"], kind="csv"),
+    "bench_batch_retrieval.py": dict(
+        args=["--tiny", "--retrievers", "edr,adr,sr", "--sizes", "1,4",
+              "--reps", "1"], kind="csv"),
+    "bench_prefetch.py": dict(
+        args=["--tiny", "--requests", "1", "--retrievers", "adr"], kind="csv"),
+    "bench_serving.py": dict(
+        args=["--tiny", "--requests", "1", "--retrievers", "sr"], kind="csv"),
+    "bench_stride.py": dict(
+        args=["--tiny", "--requests", "1", "--retrievers", "edr"], kind="csv"),
+    "bench_knnlm.py": dict(
+        args=["--tiny", "--requests", "1", "--ks", "1"], kind="csv"),
+    "bench_fleet.py": dict(
+        args=["--retriever", "edr", "--concurrency", "1,2", "--requests", "2",
+              "--max-new", "8", "--n-docs", "800"], kind="fleet"),
+    "bench_continuous.py": dict(
+        args=["--retriever", "edr", "--rates", "0", "--slots", "2",
+              "--requests", "3", "--max-new", "8", "--n-docs", "800"],
+        kind="continuous"),
+    "bench_async_fleet.py": dict(
+        args=["--retriever", "edr", "--concurrency", "2", "--requests", "2",
+              "--max-new", "8", "--n-docs", "2000", "--enc-dim", "64",
+              "--d-model", "64"], kind="async_fleet"),
+    "bench_backends.py": dict(
+        args=["--kb-sizes", "256", "--batches", "1,2", "--k", "4",
+              "--dim", "16", "--repeats", "1", "--mesh-shards", "2",
+              "--retriever", "both"], kind="backends"),
+}
+
+
+def _finite(x):
+    return isinstance(x, (int, float)) and math.isfinite(x)
+
+
+def _check_csv(payload):
+    rows = payload["rows"]
+    assert rows, "no rows emitted"
+    for r in rows:
+        assert set(r) >= {"name", "us_per_call", "derived"}, r
+        assert _finite(r["us_per_call"]) and r["us_per_call"] >= 0, r
+
+
+def _check_fleet(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    for rows in results.values():
+        assert rows
+        for r in rows:
+            assert set(r) >= {"concurrency", "tokps_modeled", "tokps_wall",
+                              "latency_modeled_s", "kb_calls"}, r
+            for key in ("tokps_modeled", "tokps_wall", "latency_modeled_s"):
+                assert _finite(r[key]) and r[key] >= 0, (key, r)
+
+
+def _check_continuous(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    for rows in results.values():
+        assert rows
+        for r in rows:
+            assert set(r) >= {"rate", "continuous", "fixed"}, r
+            for sched in ("continuous", "fixed"):
+                cell = r[sched]
+                assert set(cell) >= {"tokps_modeled", "tokps_wall", "p50_s",
+                                     "p99_s", "makespan_s"}, cell
+                assert all(_finite(v) and v >= 0 for v in cell.values()), cell
+
+
+def _check_async_fleet(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    for levels in results.values():
+        assert levels
+        for cell in levels.values():
+            assert set(cell) >= {"sync_modeled_s", "async_modeled_s",
+                                 "modeled_speedup", "rounds", "kb_calls"}, cell
+            for key in ("sync_modeled_s", "async_modeled_s",
+                        "modeled_speedup"):
+                assert _finite(cell[key]) and cell[key] >= 0, (key, cell)
+
+
+def _check_backends(payload):
+    rows = payload["rows"]
+    assert rows, "no rows emitted"
+    for r in rows:
+        assert set(r) >= {"backend", "retriever", "n_docs", "batch",
+                          "seconds", "us_per_query"}, r
+        assert _finite(r["seconds"]) and r["seconds"] >= 0, r
+    # the --retriever both sweep must cover the full backend x retriever grid
+    cells = {(r["backend"], r["retriever"]) for r in rows}
+    assert cells == {(b, a) for b in ("numpy", "kernel", "sharded")
+                     for a in ("edr", "adr")}, cells
+
+
+CHECKS = dict(csv=_check_csv, fleet=_check_fleet, continuous=_check_continuous,
+              async_fleet=_check_async_fleet, backends=_check_backends)
+
+
+def test_every_bench_script_has_a_smoke_entry():
+    scripts = sorted(f for f in os.listdir(os.path.join(ROOT, "benchmarks"))
+                     if f.startswith("bench_") and f.endswith(".py"))
+    assert scripts == sorted(BENCHES), \
+        "new bench_*.py without a smoke entry (or a stale entry here)"
+
+
+@pytest.mark.parametrize("script", sorted(BENCHES))
+def test_bench_runs_and_emits_valid_json(script, tmp_path):
+    spec = BENCHES[script]
+    out = tmp_path / "out.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, os.path.join("benchmarks", script),
+         *spec["args"], "--json", str(out)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=570)
+    assert proc.returncode == 0, \
+        f"{script} failed:\n{proc.stdout[-1500:]}\n{proc.stderr[-3000:]}"
+    assert out.exists(), f"{script} did not write --json output"
+    payload = json.loads(out.read_text())
+    assert payload.get("bench"), payload.keys()
+    CHECKS[spec["kind"]](payload)

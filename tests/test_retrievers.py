@@ -92,13 +92,16 @@ def test_batched_equals_sequential(corpus, which):
 
 
 def _ivf_reference_loop(r, queries, k):
-    """The pre-vectorization IVFRetriever.retrieve: per-query candidate
-    concatenation + GEMV + partial sort, kept as the parity oracle."""
+    """The scalar IVFRetriever.retrieve: per-query candidate concatenation +
+    GEMV + partial sort, kept as the parity oracle. Candidates are sorted by
+    id before scoring — the canonical (score desc, id asc) tie order every
+    execution backend produces (a stable sort over id-ascending candidates
+    breaks score ties by id)."""
     queries = np.atleast_2d(np.asarray(queries, np.float32))
     cs = np.argsort(-(queries @ r.centroids.T), axis=1)[:, :r.nprobe]
     all_ids, all_scores = [], []
     for qi in range(queries.shape[0]):
-        cand = np.concatenate([r.buckets[c] for c in cs[qi]])
+        cand = np.sort(np.concatenate([r.buckets[c] for c in cs[qi]]))
         if cand.size == 0:
             cand = np.arange(min(k, r.kb.size))
         s = r.kb.embeddings[cand] @ queries[qi]
