@@ -1,0 +1,154 @@
+"""Fleet-scale shared speculation cache tier on Zipf-skewed query streams.
+
+    PYTHONPATH=src python benchmarks/bench_shared_cache.py --retriever edr \
+        --slots 4 --requests 16 --distinct 6 --zipf 1.1 --rates 0,2,8
+
+At fleet scale query popularity is heavy-tailed: a few hot prompts recur
+constantly. This bench draws each request's prompt from ``--distinct``
+distinct prompts with Zipf weights (P(rank r) ~ 1/r^zipf) and serves the
+stream through ContinuousFleetServer twice per arrival rate:
+
+  * off — per-request speculation caches only (the paper's setting),
+  * on  — the SharedRetrievalCache tier in front of the KB (exact-hit on
+          query bytes, then approximate-hit on embedding inner product),
+          shared by every request; plus the always-on in-round dedup of
+          identical queries inside each merged verification call.
+
+Reported per mode: modeled p50/p99 request latency (queueing included),
+modeled makespan/throughput, KB calls and KB rows actually retrieved, the
+dedup ledger (merged rows sent vs rows saved by the in-round collapse), and
+the shared tier's hit rates. Outputs are asserted byte-identical between the
+two modes — the tier only steers speculation; batched verification still
+confirms every document (tests/test_shared_cache.py holds the same claim
+against RaLMSeq per retriever and serving path).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import RaLMConfig  # noqa: E402
+from repro.core.cache import SharedRetrievalCache  # noqa: E402
+from repro.launch.serve import build_stack, make_arrivals  # noqa: E402
+from repro.serving.batched import BatchedServeEngine  # noqa: E402
+from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
+                                      as_requests)
+from repro.training.data import make_queries  # noqa: E402
+
+from common import add_json_arg, add_tiny_arg, warm_engine, write_json  # noqa: E402
+
+
+def zipf_stream(docs, n_requests: int, n_distinct: int, alpha: float,
+                seed: int):
+    """Draw ``n_requests`` prompts from ``n_distinct`` distinct ones with
+    P(rank r) ~ 1/r^alpha — the heavy-tailed popularity the tier amortizes."""
+    distinct = [(q * 12)[:48] for q in make_queries(docs, n_distinct)]
+    w = 1.0 / np.arange(1, n_distinct + 1) ** alpha
+    picks = np.random.default_rng(seed).choice(n_distinct, size=n_requests,
+                                               p=w / w.sum())
+    return [distinct[i] for i in picks], picks.tolist()
+
+
+def serve_mode(server, prompts, arrivals, shared):
+    cr = server.serve(as_requests(prompts, arrivals))
+    cell = dict(p50_s=cr.p50, p99_s=cr.p99, makespan_s=cr.analytic_time,
+                tokps_modeled=cr.throughput(),
+                tokps_wall=cr.throughput(modeled=False),
+                kb_calls=cr.kb_calls, kb_queries=cr.kb_queries,
+                merged_rows=cr.merged_rows,
+                merged_rows_saved=cr.merged_rows_saved)
+    if shared is not None:
+        st = shared.stats()
+        cell.update(shared_hit_rate=st["hit_rate"],
+                    shared_hits_exact=st["hits_exact"],
+                    shared_hits_approx=st["hits_approx"],
+                    shared_size=st["size"])
+    return cell, [tuple(r.tokens) for r in cr.results]
+
+
+def bench_one(retr_name: str, rates, args):
+    cfg, model, params, docs, enc, retr = build_stack(retr_name,
+                                                      n_docs=args.n_docs)
+    rcfg = RaLMConfig(max_new_tokens=args.max_new,
+                      speculation_stride=args.stride)
+    prompts, picks = zipf_stream(docs, args.requests, args.distinct,
+                                 args.zipf, args.seed)
+    eng = BatchedServeEngine(model, params, args.slots, cache_window=512)
+    warm_engine(eng, rcfg)
+    off_server = ContinuousFleetServer(eng, retr, rcfg, enc)
+    off_server.serve(as_requests(prompts[:args.slots]))   # warmup: jit + stats
+
+    print(f"\n== {retr_name.upper()}  ({args.n_docs} docs, {args.requests} "
+          f"requests over {args.distinct} distinct prompts, zipf "
+          f"{args.zipf:g}, {args.slots} slots, {args.max_new} tok) ==")
+    print(f"{'rate':>6} {'shared':>7} {'p50':>8} {'p99':>8} {'makespan':>9} "
+          f"{'kb rows':>8} {'dedup saved':>12} {'hit rate':>9}")
+    rows = []
+    for rate in rates:
+        arrivals = make_arrivals(args.requests, rate, seed=args.seed)
+        off, toks_off = serve_mode(off_server, prompts, arrivals, None)
+        shared = SharedRetrievalCache(capacity=args.shared_capacity)
+        on_server = ContinuousFleetServer(eng, retr, rcfg, enc,
+                                          shared_cache=shared)
+        on, toks_on = serve_mode(on_server, prompts, arrivals, shared)
+        assert toks_on == toks_off, \
+            "shared cache changed outputs (preservation violated)"
+        tag = f"{rate:g}" if rate > 0 else "sat"
+        for label, cell in (("off", off), ("on", on)):
+            hr = (f"{cell['shared_hit_rate']:>8.0%}"
+                  if "shared_hit_rate" in cell else f"{'-':>8}")
+            print(f"{tag if label == 'off' else '':>6} {label:>7} "
+                  f"{cell['p50_s']:>7.2f}s {cell['p99_s']:>7.2f}s "
+                  f"{cell['makespan_s']:>8.2f}s {cell['kb_queries']:>8} "
+                  f"{cell['merged_rows_saved']:>12} {hr}")
+        rows.append(dict(rate=rate, off=off, on=on,
+                         outputs_identical=True))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--retriever", default="edr", help="edr | adr | sr | all")
+    ap.add_argument("--rates", default="0,2,8",
+                    help="comma-separated Poisson arrival rates (req per "
+                         "modeled second); 0 = all requests at t=0 (saturated)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--distinct", type=int, default=6,
+                    help="distinct prompts behind the Zipf draw")
+    ap.add_argument("--zipf", type=float, default=1.1,
+                    help="Zipf skew alpha (P(rank r) ~ 1/r^alpha)")
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--n-docs", type=int, default=20000)
+    ap.add_argument("--stride", type=int, default=3)
+    ap.add_argument("--shared-capacity", type=int, default=65536)
+    ap.add_argument("--seed", type=int, default=0)
+    add_tiny_arg(ap)
+    add_json_arg(ap)
+    args = ap.parse_args()
+    if args.tiny:       # CI bench-smoke sizes: end-to-end in seconds
+        args.n_docs, args.requests, args.distinct = 800, 5, 2
+        args.slots, args.max_new, args.rates = 2, 8, "0"
+    rates = [float(x) for x in args.rates.split(",")]
+    names = ["edr", "adr", "sr"] if args.retriever == "all" else [args.retriever]
+    results = {}
+    for name in names:
+        results[name] = bench_one(name, rates, args)
+    if args.json is not None:
+        write_json("shared_cache", {
+            "config": dict(rates=rates, slots=args.slots,
+                           requests=args.requests, distinct=args.distinct,
+                           zipf=args.zipf, max_new=args.max_new,
+                           n_docs=args.n_docs, stride=args.stride,
+                           shared_capacity=args.shared_capacity,
+                           seed=args.seed),
+            "results": results}, args.json)
+
+
+if __name__ == "__main__":
+    main()

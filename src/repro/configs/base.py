@@ -183,6 +183,11 @@ class RaLMConfig:
     # deterministically on stacks whose retrieval is too cheap to hide work.
     async_min_overlap: int = 0
     prefetch_top_k: int = 1           # 1 = top-1 cache update; 20/256 = prefetching
+    # fleet-only: collapse byte-identical queries inside a round's merged
+    # verification call before the collective — one KB row per unique query,
+    # scattered back to slots. Output-invariant (retrieval is a pure function
+    # of the query); FleetResult.merged_rows_saved counts the rows it saved.
+    dedup_verification: bool = True
     os3_window: int = 5               # w for gamma estimation
     gamma_max: float = 0.6
     max_stride: int = 16

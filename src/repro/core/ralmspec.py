@@ -50,7 +50,9 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.configs.base import RaLMConfig
-from repro.core.cache import DenseRetrievalCache, SparseRetrievalCache
+from repro.core.cache import (DenseRetrievalCache, SharedCacheView,
+                              SharedRetrievalCache, SparseRetrievalCache,
+                              query_key)
 from repro.core.scheduler import OS3
 from repro.retrieval.encoder import ContextEncoder
 from repro.retrieval.retrievers import BM25Retriever
@@ -94,6 +96,26 @@ def first_mismatch(specs: Sequence[int], gt_ids) -> int:
         if int(specs[i]) != int(gt_ids[i][0]):
             return i
     return len(specs)
+
+
+def dedup_queries(queries):
+    """Collapse duplicate queries ahead of a merged verification call.
+
+    -> (unique_queries, inverse) with ``queries[i] == unique_queries[inverse[i]]``
+    (byte-equality via :func:`query_key`). The KB retrieves one row per UNIQUE
+    query and the caller scatters rows back to slots with ``rows[inverse]`` —
+    output-invariant because retrieval is a pure function of the query, so
+    identical queries get identical rows either way.
+    """
+    uniq, inverse, index = [], [], {}
+    for q in queries:
+        key = query_key(q)
+        pos = index.get(key)
+        if pos is None:
+            pos = index[key] = len(uniq)
+            uniq.append(q)
+        inverse.append(pos)
+    return uniq, np.asarray(inverse, np.int64)
 
 
 @dataclass
@@ -151,13 +173,17 @@ class RequestState:
 
 class _ServerBase:
     def __init__(self, engine, retriever, rcfg: RaLMConfig,
-                 encoder: Optional[ContextEncoder] = None, chunk_len: int = 64):
+                 encoder: Optional[ContextEncoder] = None, chunk_len: int = 64,
+                 shared_cache: Optional[SharedRetrievalCache] = None):
         self.engine = engine
         self.retriever = retriever
         self.rcfg = rcfg
         self.encoder = encoder
         self.chunk_len = chunk_len
         self.sparse = isinstance(retriever, BM25Retriever)
+        # fleet-scale shared speculation tier (None = per-request caches only).
+        # Strictly a speculation source: verification still confirms every doc.
+        self.shared_cache = shared_cache
         # whether per-request OS^3 instances optimize the async objective;
         # FleetServer overrides this when pipelined (async) rounds are on
         self._os3_async = rcfg.async_verification
@@ -190,9 +216,24 @@ class _ServerBase:
     # ---- per-request state (shared with the fleet path) ----------------------------
     def _new_cache(self):
         if self.sparse:
-            return SparseRetrievalCache(self.retriever.kb, self.rcfg.cache_capacity)
-        return DenseRetrievalCache(self.retriever.kb.embeddings.shape[1],
-                                   self.rcfg.cache_capacity)
+            local = SparseRetrievalCache(self.retriever.kb,
+                                         self.rcfg.cache_capacity)
+        else:
+            local = DenseRetrievalCache(self.retriever.kb.embeddings.shape[1],
+                                        self.rcfg.cache_capacity)
+        if self.shared_cache is not None:
+            return SharedCacheView(local, self.shared_cache)
+        return local
+
+    def _shared_put(self, queries, ids, scores) -> None:
+        """Publish verified KB rows to the shared tier (no-op when disabled).
+        Called from whichever thread ran the verification call — the tier is
+        lock-guarded, so the async worker may publish while the main thread's
+        overlapped speculation stride is reading."""
+        if self.shared_cache is None:
+            return
+        for q, row_i, row_s in zip(queries, ids, scores):
+            self.shared_cache.put(q, row_i, row_s)
 
     def _cache_insert(self, cache, ids_row):
         ids_row = [int(i) for i in ids_row if int(i) >= 0]
@@ -244,37 +285,42 @@ class RaLMSeq(_ServerBase):
 class RaLMSpec(_ServerBase):
     """Algorithm 1 with optional Prefetching (P), OS^3 (S), Async verification (A).
 
-    ``persistent_cache=True`` (beyond-paper) keeps the retrieval cache across
+    ``persistent_cache=True`` (beyond-paper) keeps retrieval results across
     requests instead of the paper's per-request cache: topically-related requests
-    warm each other's speculation. Output preservation is unaffected — cache
-    contents only steer *speculation*; verification still compares against the KB.
+    warm each other's speculation. It is implemented as a private
+    :class:`SharedRetrievalCache` (the same lock-guarded tier the fleet servers
+    share), so it is safe even when the async verification worker publishes
+    results while the main thread speculates. Output preservation is unaffected —
+    cache contents only steer *speculation*; verification still compares against
+    the KB.
     """
 
     def __init__(self, engine, retriever, rcfg: RaLMConfig,
                  encoder: Optional[ContextEncoder] = None, chunk_len: int = 64,
-                 persistent_cache: bool = False):
-        super().__init__(engine, retriever, rcfg, encoder, chunk_len)
+                 persistent_cache: bool = False,
+                 shared_cache: Optional[SharedRetrievalCache] = None):
+        if persistent_cache and shared_cache is None:
+            shared_cache = SharedRetrievalCache(capacity=rcfg.cache_capacity)
+        super().__init__(engine, retriever, rcfg, encoder, chunk_len,
+                         shared_cache=shared_cache)
         self._pool = ThreadPoolExecutor(max_workers=1) \
             if rcfg.async_verification else None
-        self._persistent = persistent_cache
-        self._session_cache = None
 
     def serve(self, prompt: Sequence[int]) -> ServeResult:
         eng, r, rcfg = self.engine, self.retriever, self.rcfg
         eng.stats.reset()
         r0c, r0q, r0t = r.stats.calls, r.stats.queries, r.stats.time
-        if self._persistent and self._session_cache is None:
-            self._session_cache = self._new_cache()
-        rs = self._new_request_state(cache=self._session_cache)
+        rs = self._new_request_state()
         res = rs.res
         t0 = time.perf_counter()
 
         eng.start(list(prompt)[-rcfg.max_prompt_len:])
         # Algorithm 1 line 4: initial retrieval populates the cache (prefetched)
         q0 = self._query()
-        ids0, _ = self._retrieve_batch([q0], max(rcfg.prefetch_top_k, 1))
+        ids0, s0 = self._retrieve_batch([q0], max(rcfg.prefetch_top_k, 1))
         rs.analytic += r.stats.model_latency(1)
         self._cache_insert(rs.cache, ids0[0])
+        self._shared_put([q0], ids0, s0)
 
         # NB: a pending carry (async overlap's extra speculative step) is an
         # UNVERIFIED speculative stride — the loop must not exit on budget/EOS
@@ -371,9 +417,13 @@ class RaLMSpec(_ServerBase):
 
         Returns (ids, wall_latency, modeled_latency) — the modeled value follows the
         paper's §A.1 batched-latency shape (see RetrieverStats) and feeds the
-        analytic timeline + OS^3; wall-clock always reported alongside."""
+        analytic timeline + OS^3; wall-clock always reported alongside.
+
+        Runs on the async worker thread when async verification is on, so the
+        shared-tier publish below relies on SharedRetrievalCache's lock."""
         t0 = time.perf_counter()
         k = max(self.rcfg.prefetch_top_k, 1)
-        ids, _ = self._retrieve_batch(queries, k)
+        ids, scores = self._retrieve_batch(queries, k)
+        self._shared_put(queries, ids, scores)
         return ids, time.perf_counter() - t0, \
             self.retriever.stats.model_latency(len(queries))

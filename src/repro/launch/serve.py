@@ -63,6 +63,7 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.cache import SharedRetrievalCache
 from repro.core.ralmspec import RaLMSeq, RaLMSpec
 from repro.models.model import build_model
 from repro.retrieval.encoder import ContextEncoder
@@ -185,6 +186,14 @@ def main() -> None:
                          "(overrides --arrival-rate)")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed for Poisson arrivals")
+    ap.add_argument("--shared-cache", action="store_true",
+                    help="put a fleet-scale shared speculation cache tier in "
+                         "front of the KB (exact-hit on query bytes, then "
+                         "approximate-hit on embedding inner product); "
+                         "speculation-only, so outputs stay byte-identical "
+                         "to the baseline")
+    ap.add_argument("--shared-cache-capacity", type=int, default=65536,
+                    help="entries held by the shared cache tier (LRU)")
     args = ap.parse_args()
     if args.retriever_backend not in BACKEND_SUPPORT[args.retriever]:
         # fail loudly rather than silently measuring the wrong scan; the one
@@ -206,6 +215,8 @@ def main() -> None:
                                      speculation_stride=args.stride))
     prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
     eng = ServeEngine(model, params, cache_window=512)
+    shared = (SharedRetrievalCache(capacity=args.shared_cache_capacity)
+              if args.shared_cache else None)
 
     def run(server, label):
         tot_w = tot_g = tot_r = 0.0
@@ -224,7 +235,8 @@ def main() -> None:
     def run_fleet(label):
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
-        fleet = FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds)
+        fleet = FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds,
+                            shared_cache=shared)
         tot_w = tot_an = 0.0
         toks, n_tok = [], 0
         for i in range(0, len(prompts), args.concurrency):
@@ -241,7 +253,8 @@ def main() -> None:
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
         server = ContinuousFleetServer(beng, retr, rcfg, enc,
-                                       async_rounds=async_rounds)
+                                       async_rounds=async_rounds,
+                                       shared_cache=shared)
         arrivals = make_arrivals(len(prompts), args.arrival_rate,
                                  args.arrival_trace, args.seed)
         cr = server.serve(as_requests(prompts, arrivals))
@@ -262,7 +275,8 @@ def main() -> None:
         elif args.concurrency > 1:
             results["spec"] = run_fleet(f"Fleet x{args.concurrency}")
         else:
-            results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc), label)
+            results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc,
+                                           shared_cache=shared), label)
     if len(results) == 2:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
         print(f"outputs identical: {same}   "
@@ -273,6 +287,11 @@ def main() -> None:
         # sharded collective
         print(f"sharded collectives: {retr.backend.calls}  "
               f"KB calls: {retr.stats.calls}  (1 collective per call)")
+    if shared is not None:
+        st = shared.stats()
+        print(f"shared cache: {st['hits_exact']} exact + "
+              f"{st['hits_approx']} approx hits / {st['lookups']} lookups "
+              f"({st['hit_rate']:.0%} hit rate), {st['size']} entries")
 
 
 if __name__ == "__main__":

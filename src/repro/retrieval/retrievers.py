@@ -35,7 +35,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.retrieval.backends import DenseSearchBackend, make_backend
+from repro.retrieval.backends import (DenseSearchBackend, canonical_topk,
+                                      make_backend)
 from repro.retrieval.kb import DenseKB, SparseKB
 
 
@@ -298,15 +299,11 @@ class BM25Retriever(_TimedRetriever):
         return queries
 
     def _search(self, queries: List[list], k: int) -> Tuple[np.ndarray, np.ndarray]:
-        ids, scores = [], []
-        for q in queries:
-            s = self.kb.score(q)
-            kk = min(k, s.shape[0])
-            top = np.argpartition(-s, kth=kk - 1)[:kk]
-            top = top[np.argsort(-s[top], kind="stable")]
-            ids.append(top)
-            scores.append(s[top])
-        return np.stack(ids).astype(np.int64), np.stack(scores)
+        # canonical tie order (score desc, id asc) like the dense backends —
+        # the sparse speculation cache retrieves canonically, so under exact
+        # BM25 ties both sides name the same doc (no spurious rollback)
+        s = np.stack([self.kb.score(q) for q in queries])
+        return canonical_topk(s, k)
 
     def keys_of(self, ids) -> np.ndarray:
         """Sparse 'keys' are the per-doc term arrays."""

@@ -36,6 +36,14 @@ Design (ROADMAP north star: fleet-level amortization):
     stays stale until the next admit prefills over it.
     ContinuousFleetServer (repro.serving.continuous) drives this API to admit
     queued requests mid-flight the moment slots free up.
+
+The engine is cache-agnostic: the fleet servers attach Algorithm-1 state
+(including each slot's speculation cache — a plain per-request cache, or a
+``SharedCacheView`` over the fleet-wide ``SharedRetrievalCache`` tier when the
+shared tier is enabled) per slot via ``RequestState``; nothing here reads it.
+The exactness contract above is exactly why the shared tier preserves outputs:
+speculation picks the docs, but this engine replays whatever verification
+confirms, token-for-token.
 """
 from __future__ import annotations
 

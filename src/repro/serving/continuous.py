@@ -83,6 +83,9 @@ class ContinuousResult:
     kb_calls: int = 0
     kb_queries: int = 0
     max_live: int = 0                  # peak concurrently-live slots
+    # in-round verification dedup ledger (same semantics as FleetResult)
+    merged_rows: int = 0
+    merged_rows_saved: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -145,6 +148,7 @@ class ContinuousFleetServer(FleetServer):
                 eng.retire(b)
         r0t = r.stats.time
         r0c, r0q = r.stats.calls, r.stats.queries
+        m0, ms0 = self.merged_rows, self.merged_rows_saved
         out = ContinuousResult()
         states = {}                         # slot -> RequestState (live only)
         done = {}                           # rid  -> RequestState (retired)
@@ -214,6 +218,8 @@ class ContinuousFleetServer(FleetServer):
         out.analytic_time = clock
         out.kb_calls = r.stats.calls - r0c
         out.kb_queries = r.stats.queries - r0q
+        out.merged_rows = self.merged_rows - m0
+        out.merged_rows_saved = self.merged_rows_saved - ms0
         # report in request order; gen/retrieval time are fleet-shared (the
         # batched engine pays them once), same convention as FleetServer
         for rq in sorted(reqs, key=lambda x: x.rid):

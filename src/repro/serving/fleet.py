@@ -63,8 +63,9 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import RaLMConfig
+from repro.core.cache import SharedRetrievalCache
 from repro.core.ralmspec import (RequestState, ServeResult, _ServerBase,
-                                 first_mismatch)
+                                 dedup_queries, first_mismatch)
 
 
 @dataclass
@@ -77,6 +78,10 @@ class FleetResult:
     rounds: int = 0
     kb_calls: int = 0
     kb_queries: int = 0
+    # in-round verification dedup ledger: rows actually sent to the KB across
+    # all merged calls vs rows the byte-identical-query collapse saved
+    merged_rows: int = 0
+    merged_rows_saved: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -106,14 +111,19 @@ class FleetServer(_ServerBase):
 
     def __init__(self, engine, retriever, rcfg: RaLMConfig,
                  encoder=None, chunk_len: int = 64,
-                 async_rounds: Optional[bool] = None):
-        super().__init__(engine, retriever, rcfg, encoder, chunk_len)
+                 async_rounds: Optional[bool] = None,
+                 shared_cache: Optional[SharedRetrievalCache] = None):
+        super().__init__(engine, retriever, rcfg, encoder, chunk_len,
+                         shared_cache=shared_cache)
         self.async_rounds = (rcfg.async_verification if async_rounds is None
                              else async_rounds)
         self._pool = (ThreadPoolExecutor(max_workers=1)
                       if self.async_rounds else None)
         self._os3_async = self.async_rounds     # fleet OS^3 objective (A.2)
         self._inflight = None                   # in-flight verification handle
+        # monotonic dedup ledger; serve() diffs it into the result object
+        self.merged_rows = 0
+        self.merged_rows_saved = 0
 
     # ---- per-slot predicates (fleet versions of _ServerBase._done/_budget) ---------
     # The inherited single-request forms read engine.finished/.generated, which on
@@ -171,14 +181,39 @@ class FleetServer(_ServerBase):
     def __exit__(self, *exc):
         self.close()
 
+    def _dedup(self, queries):
+        """Collapse byte-identical queries before a merged KB call (gated on
+        ``rcfg.dedup_verification``). -> (unique_queries, inverse-or-None);
+        scatter rows back with ``rows[inverse]``. Ledger counts live here so
+        both the fixed and continuous serve loops can diff them."""
+        if not self.rcfg.dedup_verification:
+            self.merged_rows += len(queries)
+            return list(queries), None
+        uniq, inv = dedup_queries(queries)
+        self.merged_rows += len(uniq)
+        self.merged_rows_saved += len(queries) - len(uniq)
+        return uniq, inv
+
+    def _verify_merged(self, queries, k: int):
+        """The round's merged verification KB call + shared-tier publish.
+        With async rounds this body runs on the worker thread — the publish
+        is what lets slot t+1's overlapped speculation hit results verified
+        for slot t, and it is safe because the shared tier locks."""
+        ids, scores = self._retrieve_batch(queries, k)
+        self._shared_put(queries, ids, scores)
+        return ids, scores
+
     def _seed_slots(self, pairs) -> float:
         """Algorithm 1 line 4, cross-request batched: ONE KB call seeds every
-        given (slot, state) pair's cache. Returns the modeled latency of the
-        call (what the batched retrieval would cost on paper hardware)."""
+        given (slot, state) pair's cache — deduplicated, so N identical
+        prompts cost one KB row. Returns the modeled latency of the call
+        (what the batched retrieval would cost on paper hardware)."""
         if not pairs:
             return 0.0
         q0 = [self._query_tokens(self.engine.tokens[b]) for b, _ in pairs]
-        ids0, _ = self._retrieve_batch(q0, max(self.rcfg.prefetch_top_k, 1))
+        uniq, inv = self._dedup(q0)
+        ids_u, _ = self._verify_merged(uniq, max(self.rcfg.prefetch_top_k, 1))
+        ids0 = ids_u if inv is None else ids_u[inv]
         for (b, st), row in zip(pairs, ids0):
             self._cache_insert(st.cache, row)
             # per-slot ledger: batched KB calls the slot PARTICIPATED in (so a
@@ -187,7 +222,7 @@ class FleetServer(_ServerBase):
             # shared calls, so the per-slot sum exceeds it by design.
             st.res.kb_calls += 1
             st.res.kb_queries += 1
-        return self.retriever.stats.model_latency(len(pairs))
+        return self.retriever.stats.model_latency(len(uniq))
 
     def _lockstep_substep(self, doers: Sequence[int], states) -> tuple:
         """One batched speculation sub-step over ``doers``: per-slot snapshot
@@ -312,21 +347,25 @@ class FleetServer(_ServerBase):
         all_queries = [q for b in participants for q in states[b].queries]
         all_queries += list(extra)
         k = max(rcfg.prefetch_top_k, 1)
+        # in-round dedup: one KB row per UNIQUE query in the merged call;
+        # rows scatter back to slots below. The latency model sees the
+        # deduplicated width — that's the saving.
+        uniq, inv = self._dedup(all_queries)
 
         # adaptive overlap gate, the fleet form of the single path's rule:
         # only pipeline when the modeled verification latency is worth hiding
         # (ADR's cheap probes make the overlap pure downside, paper Table 4)
         overlap: Dict[int, List[tuple]] = {}
         overlap_a = 0.0
-        gt_all = None
+        gt_u = None
         if self._pool is not None:
             a_all = [a for b in participants for a in states[b].a_times]
             a_est = sum(a_all) / max(len(a_all), 1)
-            b_est = r.stats.model_latency(len(all_queries))
+            b_est = r.stats.model_latency(len(uniq))
             if b_est > rcfg.async_gate_ratio * a_est:
                 # ---- stage 2: overlap the call with round t+1's stride ------
                 self._inflight = self._pool.submit(
-                    self._retrieve_batch, all_queries, k)
+                    self._verify_merged, uniq, k)
                 try:
                     overlap, overlap_a = self._overlap_speculate(
                         participants, states, strides, a_est, b_est)
@@ -335,10 +374,11 @@ class FleetServer(_ServerBase):
                     # raised, a still-set handle would poison _drain_inflight
                     # and close() with the same re-raise
                     fut, self._inflight = self._inflight, None
-                    gt_all, _ = fut.result()
-        if gt_all is None:                      # sync round (or gate closed)
-            gt_all, _ = self._retrieve_batch(all_queries, k)
-        b_model = r.stats.model_latency(len(all_queries))
+                    gt_u, _ = fut.result()
+        if gt_u is None:                        # sync round (or gate closed)
+            gt_u, _ = self._verify_merged(uniq, k)
+        gt_all = gt_u if inv is None else gt_u[inv]
+        b_model = r.stats.model_latency(len(uniq))
         # analytic ideal (paper §4, fleet-wide): an overlapped round pays
         # max(a_overlap, b) for the in-flight window; a plain round pays b.
         analytic += max(overlap_a, b_model) if overlap_a else b_model
@@ -404,6 +444,7 @@ class FleetServer(_ServerBase):
         eng.stats.reset()
         r0t = r.stats.time
         r0c, r0q = r.stats.calls, r.stats.queries
+        m0, ms0 = self.merged_rows, self.merged_rows_saved
         states = [self._new_request_state(
             rid=b, max_new=max_new[b] if max_new is not None else None)
             for b in range(B)]
@@ -433,6 +474,8 @@ class FleetServer(_ServerBase):
         fleet.analytic_time = analytic
         fleet.kb_calls = r.stats.calls - r0c
         fleet.kb_queries = r.stats.queries - r0q
+        fleet.merged_rows = self.merged_rows - m0
+        fleet.merged_rows_saved = self.merged_rows_saved - ms0
         # per-slot time fields are the SHARED fleet timeline (lockstep rounds
         # finish together): don't sum them across slots — like kb_calls above,
         # summing overcounts by the concurrency factor. Aggregate via

@@ -51,6 +51,8 @@ BENCHES = {
         args=["--kb-sizes", "256", "--batches", "1,2", "--k", "4",
               "--dim", "16", "--repeats", "1", "--mesh-shards", "2",
               "--retriever", "both"], kind="backends"),
+    "bench_shared_cache.py": dict(
+        args=["--tiny", "--retriever", "edr"], kind="shared_cache"),
 }
 
 
@@ -118,8 +120,30 @@ def _check_backends(payload):
                      for a in ("edr", "adr")}, cells
 
 
+def _check_shared_cache(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    for rows in results.values():
+        assert rows
+        for r in rows:
+            assert set(r) >= {"rate", "off", "on", "outputs_identical"}, r
+            assert r["outputs_identical"] is True, \
+                "shared cache changed outputs"
+            for mode in ("off", "on"):
+                cell = r[mode]
+                assert set(cell) >= {"p50_s", "p99_s", "makespan_s",
+                                     "tokps_modeled", "kb_calls",
+                                     "kb_queries", "merged_rows",
+                                     "merged_rows_saved"}, cell
+                for key in ("p50_s", "p99_s", "makespan_s", "tokps_modeled"):
+                    assert _finite(cell[key]) and cell[key] >= 0, (key, cell)
+            assert set(r["on"]) >= {"shared_hit_rate", "shared_hits_exact",
+                                    "shared_hits_approx"}, r["on"]
+
+
 CHECKS = dict(csv=_check_csv, fleet=_check_fleet, continuous=_check_continuous,
-              async_fleet=_check_async_fleet, backends=_check_backends)
+              async_fleet=_check_async_fleet, backends=_check_backends,
+              shared_cache=_check_shared_cache)
 
 
 def test_every_bench_script_has_a_smoke_entry():

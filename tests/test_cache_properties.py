@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the paper's rank-preservation invariant
 (§3): if the KB top-1 document for a query is in the local cache, cache retrieval
-returns exactly that document — for both dense and BM25 scoring."""
+returns exactly that document — for both dense and BM25 scoring; plus the
+canonical tie-order contract (score desc, id asc — parity with FlatBackend on
+tie-heavy KBs), LRU eviction edge cases (capacity=1, k > size, duplicate-heavy
+insert streams), and payload refresh on duplicate insert."""
 import numpy as np
 import pytest
 
@@ -10,6 +13,7 @@ from hypothesis import given, settings  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 
 from repro.core.cache import DenseRetrievalCache, SparseRetrievalCache
+from repro.retrieval.backends import FlatBackend
 from repro.retrieval.kb import DenseKB, SparseKB
 from repro.retrieval.retrievers import BM25Retriever, ExactDenseRetriever
 from repro.training.data import synthetic_corpus
@@ -103,3 +107,123 @@ def test_bm25_cache_scores_equal_kb_scores():
     cids, cscores = cache.retrieve(query, 5)
     np.testing.assert_allclose(cscores, scores[0], atol=1e-5)
     assert list(cids) == list(ids[0])
+
+
+# ---------------------------------------------------------------------------------
+# canonical tie order: cache retrieval == FlatBackend on tie-heavy KBs
+# ---------------------------------------------------------------------------------
+@st.composite
+def tie_heavy_dense(draw):
+    """Grid-quantized embeddings tiled from a tiny base: float32 dot products
+    are exact (integers/2) and most scores collide, so every tie-break path is
+    exercised. Insertion order is a permutation — the cache's LRU slot layout
+    must never leak into the returned order."""
+    d = draw(st.sampled_from([4, 8]))
+    base = draw(st.integers(2, 4))
+    reps = draw(st.integers(2, 6))
+    seed = draw(st.integers(0, 10_000))
+    g = np.random.default_rng(seed)
+    emb = np.tile(g.integers(-2, 3, size=(base, d)).astype(np.float32) / 2,
+                  (reps, 1))
+    q = g.integers(-2, 3, size=d).astype(np.float32) / 2
+    order = g.permutation(emb.shape[0])
+    k = draw(st.integers(1, emb.shape[0]))
+    return emb, q, order, k
+
+
+@given(tie_heavy_dense())
+@settings(max_examples=60, deadline=None)
+def test_dense_cache_tie_order_matches_flat_backend(case):
+    emb, q, order, k = case
+    cache = DenseRetrievalCache(emb.shape[1], capacity=emb.shape[0])
+    for i in order:                      # arbitrary LRU slot layout
+        cache.insert([int(i)], emb[i:i + 1])
+    cids, cscores = cache.retrieve(q, k)
+    ids, scores = FlatBackend(emb).search(q[None], k)
+    assert list(cids) == list(ids[0]), \
+        "cache tie order diverged from the canonical backend order"
+    np.testing.assert_array_equal(cscores, scores[0])
+
+
+@given(st.integers(0, 3000), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_sparse_cache_tie_order_matches_bm25_retriever(seed, k):
+    g = np.random.default_rng(seed)
+    docs = synthetic_corpus(24, 128, n_topics=2, seed=seed % 53)
+    docs = [docs[i % 8] for i in range(24)]      # duplicates -> exact ties
+    kb = SparseKB.build(docs)
+    r = BM25Retriever(kb)
+    query = list(g.integers(2, 128, 4))
+    ids, scores = r.retrieve([query], k)
+    cache = SparseRetrievalCache(kb, capacity=32)
+    cache.insert(g.permutation(24))              # arbitrary slot layout
+    cids, cscores = cache.retrieve(query, k)
+    assert list(cids) == list(ids[0]), \
+        "sparse cache tie order diverged from BM25Retriever"
+    np.testing.assert_allclose(cscores, scores[0], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------------
+# LRU eviction edge cases + duplicate-insert payload refresh
+# ---------------------------------------------------------------------------------
+@given(st.integers(0, 2000), st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_capacity_one_cache_holds_exactly_last_insert(seed, n_ins):
+    g = np.random.default_rng(seed)
+    cache = DenseRetrievalCache(4, capacity=1)
+    ids = g.integers(0, 10, n_ins)
+    keys = g.standard_normal((n_ins, 4)).astype(np.float32)
+    for i in range(n_ins):
+        cache.insert([int(ids[i])], keys[i:i + 1])
+    assert cache.size == 1
+    last = int(ids[-1])
+    assert last in cache
+    got, sc = cache.retrieve(g.standard_normal(4).astype(np.float32), 3)
+    assert int(got[0]) == last
+    # k > size: padded with -1 ids and -inf scores
+    assert list(got[1:]) == [-1, -1]
+    assert np.all(np.isneginf(sc[1:]))
+
+
+@given(st.integers(2, 12), st.lists(st.integers(0, 4), min_size=1,
+                                    max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_duplicate_heavy_insert_stream_lru(cap, stream):
+    """Only 5 distinct ids through any capacity: size never exceeds the
+    distinct count, nothing is evicted while it fits, and the LRU victim under
+    overflow is the least-recently *touched* id (insert touches)."""
+    cache = DenseRetrievalCache(2, capacity=cap)
+    g = np.random.default_rng(cap)
+    last_touch = {}
+    for t, did in enumerate(stream):
+        cache.insert([did], g.standard_normal((1, 2)).astype(np.float32))
+        last_touch[did] = t
+    distinct = len(last_touch)
+    assert cache.size == min(distinct, cap)
+    survivors = sorted(last_touch, key=last_touch.get)[-cache.size:]
+    for did in survivors:
+        assert did in cache
+    for did in set(last_touch) - set(survivors):
+        assert did not in cache
+
+
+@given(st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_duplicate_insert_refreshes_key_and_value(seed):
+    """Re-inserting a resident id must overwrite its stored key AND value —
+    a stale key mis-scores speculation; a stale value poisons values_of
+    (the KNN-LM payload path)."""
+    g = np.random.default_rng(seed)
+    cache = DenseRetrievalCache(4, capacity=8)
+    k_old = g.standard_normal((1, 4)).astype(np.float32)
+    k_new = g.standard_normal((1, 4)).astype(np.float32)
+    cache.insert([3], k_old, [111])
+    cache.insert([5], g.standard_normal((1, 4)).astype(np.float32), [55])
+    cache.insert([3], k_new, [222])
+    assert cache.size == 2
+    assert list(cache.values_of([3, 5])) == [222, 55]
+    q = g.standard_normal(4).astype(np.float32)
+    ids, sc = cache.retrieve(q, 2)
+    expect = float(k_new[0] @ q)
+    got = float(sc[list(ids).index(3)])
+    assert np.isclose(got, expect), "retrieve scored a stale key"
