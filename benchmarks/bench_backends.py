@@ -21,9 +21,17 @@ funnels into — across KB size and query batch for each execution backend in
               real mesh runs, and its latency is one scan + O(shards*B*k)
               collective volume.
 
+Each strategy's **int8 quantized sibling** (int8 / int8-kernel /
+int8-sharded) runs in the same sweep: the KB held as per-row symmetric int8
+codes + fp32 scales, ~4x less index memory. Quantized rows are INEXACT
+(`exact` false) — every row records `kb_bytes` (resident index footprint)
+and `recall_at_k` measured against the flat fp32 scan on the same queries
+(exact backends score 1.0 by construction; the quantized contract is
+recall@k >= 0.95, tests/test_quantized.py).
+
 ``--retriever`` adds the ADR axis: `adr` (or `both`) times the IVF probe —
 host-side centroid scan + the backend-executed gathered bucket scan
-(`search_gathered`) — through the SAME three backends, the regime where the
+(`search_gathered`) — through the SAME backends, the regime where the
 paper reports its weakest speedups (1.04–1.39x) and backend efficiency
 matters most. Rows carry a `retriever` field either way.
 
@@ -79,13 +87,25 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
         r.stats = RetrieverStats("linear_intercept")
         r.backend = backend
         return r
+    def recall_at_k(ids, ref_ids):
+        """Fraction of the fp32 reference's real top-k ids the backend
+        recovered, averaged over the batch (pad slots id=-1 excluded)."""
+        hits = []
+        for row, ref in zip(np.asarray(ids), np.asarray(ref_ids)):
+            want = set(int(i) for i in ref if i >= 0)
+            if not want:
+                continue
+            got = set(int(i) for i in row if i >= 0)
+            hits.append(len(got & want) / len(want))
+        return float(np.mean(hits)) if hits else 1.0
+
     rng = np.random.default_rng(0)
     on_tpu = jax.default_backend() == "tpu"
     force_ref = not on_tpu and not kernel_interpret
     rows = []
     built_shards = None                 # what ShardedBackend actually ran with
-    print(f"{'retr':4s} {'backend':8s} {'n_docs':>8s} {'batch':>6s} "
-          f"{'seconds':>10s} {'us/query':>10s}")
+    print(f"{'retr':4s} {'backend':13s} {'n_docs':>8s} {'batch':>6s} "
+          f"{'seconds':>10s} {'us/query':>10s} {'recall':>7s} {'kb_MB':>7s}")
     for n in kb_sizes:
         emb = rng.standard_normal((n, dim)).astype(np.float32)
         emb /= np.linalg.norm(emb, axis=1, keepdims=True)
@@ -93,14 +113,19 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
             make_backend("numpy", emb),
             make_backend("kernel", emb, force_ref=force_ref),
             make_backend("sharded", emb, n_shards=mesh_shards or None),
+            make_backend("int8", emb),
+            make_backend("int8-kernel", emb, force_ref=force_ref),
+            make_backend("int8-sharded", emb, n_shards=mesh_shards or None),
         ]
-        built_shards = backends[-1].n_shards    # may be < --mesh-shards
-        scans = []                      # (backend name, retriever axis, call)
+        built_shards = backends[2].n_shards     # may be < --mesh-shards
+        scans = []   # (backend, retriever axis, call) — call -> (ids, scores)
+        ref_call = {}                   # axis -> the flat fp32 reference scan
         proto = None                    # IVF clustering, built once per KB
         for b in backends:
             if retriever in ("edr", "both"):
-                scans.append((b.name, "edr",
+                scans.append((b, "edr",
                               lambda qs, kk, b=b: b.search(qs, kk)))
+                ref_call.setdefault("edr", scans[-1][2])
             if retriever in ("adr", "both"):
                 # ONE clustering per KB size, shared across backends: the
                 # cell times the probe — host centroid scan +
@@ -112,17 +137,22 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
                     r = proto
                 else:
                     r = ivf_with_backend(proto, b)
-                scans.append((b.name, "adr",
+                scans.append((b, "adr",
                               lambda qs, kk, r=r: r.retrieve(qs, kk)))
+                ref_call.setdefault("adr", scans[-1][2])
         for B in batches:
             qs = rng.standard_normal((B, dim)).astype(np.float32)
-            for bname, axis, call in scans:
+            for b, axis, call in scans:
+                rec = recall_at_k(call(qs, k)[0], ref_call[axis](qs, k)[0])
                 sec = _timed(lambda: call(qs, k), repeats)
-                rows.append(dict(backend=bname, retriever=axis, n_docs=n,
+                rows.append(dict(backend=b.name, retriever=axis, n_docs=n,
                                  batch=B, seconds=sec,
-                                 us_per_query=sec / B * 1e6))
-                print(f"{axis:4s} {bname:8s} {n:8d} {B:6d} {sec:10.5f} "
-                      f"{sec / B * 1e6:10.1f}")
+                                 us_per_query=sec / B * 1e6,
+                                 exact=bool(b.exact),
+                                 recall_at_k=rec, kb_bytes=int(b.kb_bytes)))
+                print(f"{axis:4s} {b.name:13s} {n:8d} {B:6d} {sec:10.5f} "
+                      f"{sec / B * 1e6:10.1f} {rec:7.3f} "
+                      f"{b.kb_bytes / 1e6:7.2f}")
     return rows, dict(k=k, dim=dim, repeats=repeats,
                       retriever=retriever, n_clusters=n_clusters,
                       nprobe=nprobe,

@@ -35,8 +35,9 @@ from repro.serving.engine import ServeEngine  # noqa: E402
 def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
         mesh_shards: int = 0) -> list:
     """``backend`` picks the EDR datastore-scan backend
-    (repro.retrieval.backends: numpy / kernel / sharded); ``mesh_shards``
-    caps the sharded shard count (0 = one shard per visible device)."""
+    (repro.retrieval.backends.BACKENDS, int8 quantized included);
+    ``mesh_shards`` caps the sharded shard count (0 = one shard per visible
+    device)."""
     rows = []
     cfg = reduced(get_config("knnlm-247m"), layers=2, d_model=128, vocab=VOCAB)
     model = build_model(cfg)
@@ -46,7 +47,8 @@ def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
     edr = ExactDenseRetriever(ds, backend=backend, mesh_shards=mesh_shards)
     if backend != "numpy":
         detail = (f"{edr.backend.n_shards} shard(s)"
-                  if edr.backend.name == "sharded" else "device-resident KB")
+                  if edr.backend.name.endswith("sharded")
+                  else "device-resident KB")
         print(f"EDR datastore backend: {edr.backend.name} ({detail})")
     for rname, retr in [("edr", edr),
                         ("adr", IVFRetriever(ds, n_clusters=128, nprobe=4,
@@ -71,12 +73,14 @@ def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(allow_abbrev=False)
-    ap.add_argument("--backend", choices=["numpy", "kernel", "sharded"],
+    from repro.retrieval.backends import BACKENDS
+    ap.add_argument("--backend", choices=list(BACKENDS),
                     default="numpy",
-                    help="EDR datastore-scan backend (repro.retrieval.backends)")
+                    help="EDR datastore-scan backend (repro.retrieval."
+                         "backends; int8* variants are inexact/quantized)")
     ap.add_argument("--mesh-shards", type=int, default=0,
-                    help="shard count for --backend sharded (0 = one shard "
-                         "per visible device; N > 1 on CPU forces an "
+                    help="shard count for the sharded backends (0 = one "
+                         "shard per visible device; N > 1 on CPU forces an "
                          "N-device host platform before jax initializes)")
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--ks", default="1,8,64",

@@ -21,6 +21,15 @@ the (B, C) candidate-id matrix (-1 = padding). Pad slots are masked to the NEG
 sentinel before the streaming top-k, so they can never displace a real
 candidate; candidate columns arrive id-sorted (the backend contract), which
 makes the kernel's first-position tie break the canonical id-ascending order.
+
+The QUANT variants (:func:`quant_topk_pallas`, :func:`quant_gathered_topk_pallas`)
+are the int8-KB form of both scans: the KB streams as int8 codes plus a per-row
+fp32 scale (symmetric per-row quantization — see
+`repro.retrieval.backends.quantize_kb`), and DEQUANT + MATMUL + TOP-K fuse into
+one kernel. The int8→f32 cast happens tile-by-tile in VMEM, the scale multiply
+lands on the (B, block) score tile, and nothing fp32-sized ever round-trips
+through HBM — which is the point: HBM traffic (and KB residency) drop ~4x while
+the streaming top-k machinery is byte-for-byte the same `_select_topk`.
 """
 from __future__ import annotations
 
@@ -194,3 +203,162 @@ def dense_topk_pallas(queries: jax.Array, kb: jax.Array, k: int, *,
         ],
         interpret=interpret,
     )(queries, kb)
+
+
+def _quant_topk_kernel(q_ref, kbq_ref, scale_ref, out_s_ref, out_i_ref,
+                       run_s, run_i, *, k: int, block_n: int, n_total: int):
+    """Fused dequant + matmul + streaming top-k over an int8 KB tile.
+
+    The tile dequantizes in VMEM (int8 -> f32 cast feeds the MXU matmul) and
+    the per-row scale lands on the (B, block_n) SCORE tile — one multiply per
+    score instead of one per KB element, algebraically identical because the
+    scale is constant along d: q . (s_i * c_i) == s_i * (q . c_i)."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...]                                        # (B, d) f32
+    kbq = kbq_ref[...].astype(jnp.float32)                # (block_n, d) int8
+    scl = scale_ref[...]                                  # (1, block_n) f32
+    s = jax.lax.dot_general(q, kbq, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (B, block_n)
+    s = s * scl                                           # dequant on scores
+    base = j * block_n
+    ids = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(ids < n_total, s, NEG)                  # mask KB padding rows
+    merged_s = jnp.concatenate([run_s[...], s], axis=1)
+    merged_i = jnp.concatenate([run_i[...], ids], axis=1)
+    top_s, top_i = _select_topk(merged_s, merged_i, k)
+    run_s[...] = top_s
+    run_i[...] = top_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def _quant_gathered_topk_kernel(q_ref, emb_ref, scl_ref, cand_ref, out_s_ref,
+                                out_i_ref, run_s, run_i, *, k: int):
+    """Gathered (ADR/IVF) form of the fused dequant scan: per-row batched dot
+    over int8 candidate embeddings, candidate-wise scale multiply, pad slots
+    (-1 ids) masked to NEG before the streaming top-k."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[...]                                        # (B, d)
+    emb = emb_ref[...].astype(jnp.float32)                # (B, block_c, d) int8
+    scl = scl_ref[...]                                    # (B, block_c)
+    ids = cand_ref[...]                                   # (B, block_c)
+    s = jax.lax.dot_general(q, emb, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # (B, block_c)
+    s = s * scl
+    s = jnp.where(ids >= 0, s, NEG)
+    merged_s = jnp.concatenate([run_s[...], s], axis=1)
+    merged_i = jnp.concatenate([run_i[...], ids], axis=1)
+    top_s, top_i = _select_topk(merged_s, merged_i, k)
+    run_s[...] = top_s
+    run_i[...] = top_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def quant_topk_pallas(queries: jax.Array, kb_q: jax.Array, scales: jax.Array,
+                      k: int, *, block_n: int = 1024,
+                      interpret: bool = False):
+    """queries (B, d) f32; kb_q (N, d) int8; scales (N,) f32
+    -> (scores (B, k), ids (B, k)) of the dequantized scan
+    ``(q @ kb_q.T) * scales``."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, d = queries.shape
+    N = kb_q.shape[0]
+    block_n = max(min(block_n, N), 128)     # MXU-aligned tile, never tiny
+    nb = -(-N // block_n)
+    pad = nb * block_n - N
+    if pad:
+        kb_q = jnp.pad(kb_q, ((0, pad), (0, 0)))
+        scales = jnp.pad(scales, (0, pad))
+    # scales stream as one lane-aligned (1, block_n) row per grid step
+    scales = scales.reshape(nb, block_n)
+
+    kernel = functools.partial(_quant_topk_kernel, k=k, block_n=block_n,
+                               n_total=N)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j: (0, 0)),          # queries resident
+            pl.BlockSpec((block_n, d), lambda j: (j, 0)),    # int8 tile stream
+            pl.BlockSpec((1, block_n), lambda j: (j, 0)),    # row scales
+        ],
+        out_specs=[
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, k), jnp.float32),
+            pltpu.VMEM((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, kb_q, scales)
+
+
+def quant_gathered_topk_pallas(queries: jax.Array, cand_emb: jax.Array,
+                               cand_scl: jax.Array, cand: jax.Array, k: int, *,
+                               block_c: int = 512, interpret: bool = False):
+    """queries (B, d) f32; cand_emb (B, C, d) int8; cand_scl (B, C) f32;
+    cand (B, C) int32 (-1 pad) -> (scores (B, k), ids (B, k)); pad slots
+    surface as (NEG, -1)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, d = queries.shape
+    C = cand.shape[1]
+    block_c = max(min(block_c, -(-C // 128) * 128), 128)
+    nb = -(-C // block_c)
+    pad = nb * block_c - C
+    if pad:
+        cand_emb = jnp.pad(cand_emb, ((0, 0), (0, pad), (0, 0)))
+        cand_scl = jnp.pad(cand_scl, ((0, 0), (0, pad)))
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+
+    kernel = functools.partial(_quant_gathered_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j: (0, 0)),           # queries resident
+            pl.BlockSpec((B, block_c, d), lambda j: (0, j, 0)),  # int8 tiles
+            pl.BlockSpec((B, block_c), lambda j: (0, j)),     # cand scales
+            pl.BlockSpec((B, block_c), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+            pl.BlockSpec((B, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, k), jnp.float32),
+            pltpu.VMEM((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, cand_emb, cand_scl, cand)

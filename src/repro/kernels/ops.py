@@ -14,7 +14,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.dense_topk import dense_topk_pallas, gathered_topk_pallas
+from repro.kernels.dense_topk import (dense_topk_pallas, gathered_topk_pallas,
+                                      quant_gathered_topk_pallas,
+                                      quant_topk_pallas)
 
 
 def _interpret() -> bool:
@@ -47,6 +49,34 @@ def gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array, k: int,
     if force_ref:
         return ref.gathered_topk_ref(queries, emb, cand, k)
     return gathered_topk_pallas(queries, emb, cand, k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "force_ref"))
+def quant_dense_topk(queries: jax.Array, kb_q: jax.Array, scales: jax.Array,
+                     k: int, force_ref: bool = False):
+    """Fused dequant + matmul + top-k over an int8 KB: (B, d) x (N, d) int8
+    with per-row fp32 scales -> top-k of ``(q @ kb_q.T) * scales``. The KB
+    never materializes in fp32 — the cast happens tile-wise in VMEM and the
+    scale multiply lands on the score tile."""
+    if force_ref:
+        return ref.quant_dense_topk_ref(queries, kb_q, scales, k)
+    return quant_topk_pallas(queries, kb_q, scales, k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "force_ref"))
+def quant_gathered_topk(queries: jax.Array, kb_q: jax.Array,
+                        scales: jax.Array, cand: jax.Array, k: int,
+                        force_ref: bool = False):
+    """Masked/gathered fused dequant scan (the ADR/IVF probe over an int8 KB):
+    query b scores only the rows named by cand[b] ((B, C) int32, -1 = pad).
+    The candidate gather pulls int8 codes + fp32 row scales — 4x less HBM
+    traffic than the fp32 gather; pad slots come back as (NEG sentinel, -1)."""
+    emb = jnp.take(kb_q, jnp.maximum(cand, 0), axis=0)    # (B, C, d) int8
+    scl = jnp.take(scales, jnp.maximum(cand, 0), axis=0)  # (B, C) f32
+    if force_ref:
+        return ref.quant_gathered_topk_ref(queries, emb, scl, cand, k)
+    return quant_gathered_topk_pallas(queries, emb, scl, cand, k,
+                                      interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("force_ref",))

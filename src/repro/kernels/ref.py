@@ -28,6 +28,32 @@ def gathered_topk_ref(queries: jax.Array, cand_emb: jax.Array,
     return scores, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
 
 
+def quant_dense_topk_ref(queries: jax.Array, kb_q: jax.Array,
+                         scales: jax.Array, k: int):
+    """queries (B, d) f32; kb_q (N, d) int8; scales (N,) f32 -> the dequantized
+    scan ``(q @ kb_q.T) * scales``: (scores (B, k), ids (B, k)). The scale
+    multiply lands on the score matrix (scale is constant along d), matching
+    the fused kernel's operation order bit for bit."""
+    s = jnp.einsum("bd,nd->bn", queries.astype(jnp.float32),
+                   kb_q.astype(jnp.float32))
+    s = s * scales.astype(jnp.float32)[None, :]
+    scores, ids = jax.lax.top_k(s, k)
+    return scores, ids.astype(jnp.int32)
+
+
+def quant_gathered_topk_ref(queries: jax.Array, cand_emb: jax.Array,
+                            cand_scl: jax.Array, cand: jax.Array, k: int):
+    """queries (B, d); cand_emb (B, C, d) int8; cand_scl (B, C) f32;
+    cand (B, C) int32, -1 = padding -> (scores (B, k), ids (B, k)); pad slots
+    surface as (NEG sentinel, -1)."""
+    s = jnp.einsum("bd,bcd->bc", queries.astype(jnp.float32),
+                   cand_emb.astype(jnp.float32))
+    s = s * cand_scl.astype(jnp.float32)
+    s = jnp.where(cand >= 0, s, NEG)
+    scores, pos = jax.lax.top_k(s, k)
+    return scores, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
+
+
 def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           causal: bool = True, window: int = 0,
                           prefix_len: int = 0) -> jax.Array:

@@ -29,30 +29,37 @@ verification KB call runs on a worker thread while the fleet speculates the
 next lockstep stride, with per-slot carry/invalidation — the paper's +A,
 fleet-wide. A variant containing 'a' implies it.
 
-``--retriever-backend {numpy,kernel,sharded}`` picks the dense retrievers'
-execution backend (`repro.retrieval.backends`): the flat numpy scan, the
-Pallas blocked top-k (`kernels/dense_topk`, interpret mode on CPU, Mosaic on
-TPU; KB resident on device), or the mesh-sharded scan (`retrieval/sharded.py`)
-where every merged verification round is ONE collective over the KB shards.
-EDR delegates its full scan (``search``); ADR delegates its IVF bucket scan
-(``search_gathered`` — centroid scoring stays host-side, so the merged ADR
-probe is still one collective on the sharded backend). SR has a single
+``--retriever-backend {numpy,kernel,sharded,int8,int8-kernel,int8-sharded}``
+picks the dense retrievers' execution backend (`repro.retrieval.backends`):
+the flat numpy scan, the Pallas blocked top-k (`kernels/dense_topk`,
+interpret mode on CPU, Mosaic on TPU; KB resident on device), the
+mesh-sharded scan (`retrieval/sharded.py`) where every merged verification
+round is ONE collective over the KB shards — or their int8 quantized
+siblings, which hold the KB as per-row symmetric int8 codes + fp32 scales
+(~4x less index memory; INEXACT: a tested recall@k >= 0.95 contract instead
+of byte-parity, see docs/architecture.md). EDR delegates its full scan
+(``search``); ADR delegates its IVF bucket scan (``search_gathered`` —
+centroid scoring stays host-side, so the merged ADR probe is still one
+collective on the sharded backends, fp32 and int8 alike). SR has a single
 execution strategy (see ``BACKEND_SUPPORT``). ``--mesh-shards N`` sets the
 shard count — on a CPU host it forces an N-device host platform (XLA_FLAGS,
 applied below before jax initializes), simulating the multi-chip layout the
-sharded backend targets:
+sharded backends target:
 
     PYTHONPATH=src python -m repro.launch.serve --concurrency 4 \
         --retriever-backend sharded --mesh-shards 4 --requests 4
 
     PYTHONPATH=src python -m repro.launch.serve --retriever adr \
         --retriever-backend sharded --mesh-shards 4 --concurrency 4 --requests 4
+
+    PYTHONPATH=src python -m repro.launch.serve --concurrency 4 \
+        --retriever-backend int8-sharded --mesh-shards 4 --requests 4
 """
 from __future__ import annotations
 
 # --mesh-shards N must force the N-device host platform BEFORE jax loads;
 # repro.retrieval.backends is jax-free at import time, so this is safe here
-from repro.retrieval.backends import bootstrap_mesh_shards
+from repro.retrieval.backends import BACKENDS, bootstrap_mesh_shards
 
 bootstrap_mesh_shards()
 
@@ -79,11 +86,12 @@ from repro.training.data import make_queries, synthetic_corpus
 
 # which execution backends each retriever supports — the ONE table the CLI
 # validation, the drivers, and the docs all mean. EDR delegates its full scan
-# and ADR its IVF bucket scan to `repro.retrieval.backends`; SR's BM25 term
-# scan has a single (numpy) execution strategy.
+# and ADR its IVF bucket scan to `repro.retrieval.backends` (fp32 and int8
+# quantized strategies alike); SR's BM25 term scan has a single (numpy)
+# execution strategy.
 BACKEND_SUPPORT = {
-    "edr": ("numpy", "kernel", "sharded"),
-    "adr": ("numpy", "kernel", "sharded"),
+    "edr": BACKENDS,
+    "adr": BACKENDS,
     "sr": ("numpy",),
 }
 
@@ -93,9 +101,9 @@ def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-m
                 enc_dim: int = 64, d_model: int = 256):
     """Model + corpus + retriever for the serving drivers and benchmarks.
     ``backend`` picks the dense retrievers' execution backend
-    (`repro.retrieval.backends`: 'numpy' / 'kernel' / 'sharded' — EDR's full
+    (`repro.retrieval.backends.BACKENDS`, fp32 or int8 quantized — EDR's full
     scan and ADR's IVF bucket scan alike); ``mesh_shards`` caps the sharded
-    backend's shard count (0 = one shard per visible device);
+    backends' shard count (0 = one shard per visible device);
     ``enc_dim``/``d_model`` let benchmarks tune the retrieval-vs-LM cost
     ratio (bench_async_fleet needs retrieval-heavy EDR)."""
     if backend not in BACKEND_SUPPORT.get(retriever, ()):
@@ -167,14 +175,17 @@ def main() -> None:
                          "speculation stride (per-slot carry, adaptive gate; "
                          "implied by a variant containing 'a')")
     ap.add_argument("--retriever-backend",
-                    choices=["numpy", "kernel", "sharded"], default="numpy",
+                    choices=list(BACKENDS), default="numpy",
                     help="dense scoring backend (EDR full scan / ADR bucket "
                          "scan): numpy, the Pallas top-k kernel (interpret "
-                         "mode on CPU), or the mesh-sharded scan (one "
-                         "collective per merged verification round). SR "
-                         "supports numpy only")
+                         "mode on CPU), the mesh-sharded scan (one "
+                         "collective per merged verification round), or "
+                         "their int8 quantized siblings int8/int8-kernel/"
+                         "int8-sharded (~4x less index memory, recall@k "
+                         "contract instead of byte-parity). SR supports "
+                         "numpy only")
     ap.add_argument("--mesh-shards", type=int, default=0,
-                    help="shard count for --retriever-backend sharded "
+                    help="shard count for the sharded backends "
                          "(0 = one shard per visible device; on CPU, N > 1 "
                          "forces an N-device host platform before jax "
                          "initializes)")
@@ -208,7 +219,12 @@ def main() -> None:
     if args.retriever_backend != "numpy":
         b = retr.backend
         detail = (f"{b.n_shards} shard(s), one collective per KB call"
-                  if b.name == "sharded" else "device-resident KB")
+                  if b.name.endswith("sharded") else
+                  "device-resident KB" if b.name.endswith("kernel") else
+                  "int8 codes + fp32 row scales, numpy scan")
+        if not b.exact:
+            detail += (f"; INEXACT (recall contract), index "
+                       f"{b.kb_bytes / 1e6:.1f} MB int8")
         print(f"{args.retriever.upper()} backend: {b.name} ({detail})")
     rcfg = variant_config(args.variant.replace("-", ""),
                           RaLMConfig(max_new_tokens=args.max_new,
@@ -281,7 +297,7 @@ def main() -> None:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
         print(f"outputs identical: {same}   "
               f"speed-up {results['seq'][0] / max(results['spec'][0], 1e-9):.2f}x")
-    if getattr(getattr(retr, "backend", None), "name", "") == "sharded":
+    if getattr(getattr(retr, "backend", None), "name", "").endswith("sharded"):
         # the merge invariant, visible: every KB call (seed or merged
         # verification round — EDR scan or ADR probe) executed as exactly one
         # sharded collective

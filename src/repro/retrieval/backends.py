@@ -36,6 +36,30 @@ don't divide the shard count). Backends are *pure* scans: no timing, no stats
 to exclude compile-polluted first calls per shape from the latency-unit
 calibration.
 
+Each of the three strategies also has an **int8 quantized** sibling holding
+the KB as per-row symmetric int8 codes + fp32 scales (~4x less index memory;
+:func:`quantize_kb`):
+
+  * :class:`QuantizedFlatBackend`    (``int8``) — the numpy reference:
+    chunked dequant matmul, never materializing a full fp32 KB copy.
+  * :class:`QuantizedKernelBackend`  (``int8-kernel``) — the fused Pallas
+    dequant+matmul+top-k (`kernels.ops.quant_dense_topk`): only int8 codes
+    stream HBM -> VMEM; the cast + scale multiply happen tile-wise on chip.
+  * :class:`QuantizedShardedBackend` (``int8-sharded``) — per-shard int8
+    residency on the mesh; the dequant multiply rides the same single
+    collective per call as the fp32 sharded scan.
+
+Quantized backends are INEXACT: they carry ``exact = False`` and promise a
+*recall contract* (recall@k >= 0.95 vs :class:`FlatBackend` across the
+property-test KB grid, tests/test_quantized.py) instead of byte-parity. The
+three int8 backends share ONE host-side quantization (:func:`quantize_kb`)
+and the same score expression ``(q @ codes.T) * scales``, so they remain
+byte-comparable with *each other* on grid-quantized inputs, and
+speculate+verify through the same inexact backend still byte-matches a
+sequential run on that backend (determinism, not exactness, is what the
+serving layers need). Every backend reports its resident index footprint as
+``kb_bytes``.
+
 Adding a backend (multi-host, quantized index, ...) is a leaf change here plus
 a name in :func:`make_backend`; no retriever or server grows a constructor
 branch for it.
@@ -79,8 +103,12 @@ def bootstrap_mesh_shards() -> None:
 class DenseSearchBackend(Protocol):
     """Pure dense top-k scan over a fixed KB embedding matrix."""
 
-    name: str            # CLI spelling ("numpy" / "kernel" / "sharded")
-    calls: int           # completed scans (ShardedBackend: collectives issued)
+    name: str            # CLI spelling (one of BACKENDS)
+    calls: int           # completed scans (sharded backends: collectives issued)
+    exact: bool          # True: byte-parity with FlatBackend is contractual;
+    #                      False: the bounded-recall contract applies instead
+    #                      (recall@k >= 0.95 vs FlatBackend + determinism)
+    kb_bytes: int        # resident index footprint (codes + scales if int8)
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         """queries (B, d) float32 -> (ids (B, k) int64, scores (B, k) float32),
@@ -185,6 +213,60 @@ def gathered_scores(embeddings: np.ndarray, queries: np.ndarray,
     return np.where(cand >= 0, s, -np.inf)
 
 
+def quantize_kb(embeddings: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 quantization of a KB embedding matrix:
+    ``(N, d) float -> (codes (N, d) int8, scales (N,) float32)`` with
+    ``scales = max(|row|) / 127`` (floored at 1e-12 so all-zero rows stay
+    finite) and ``codes = clip(rint(row / scale), -127, 127)``.
+
+    Properties the tests pin down (tests/test_quantized.py): scales are
+    strictly positive; ``127 * scale`` recovers each row's max-abs to a few
+    ulp; dequant error is at most ``scale / 2`` per element; identical rows
+    get identical codes+scales. Every int8 backend calls THIS function, so
+    the three quantized execution strategies score one and the same code
+    matrix."""
+    emb = np.asarray(embeddings, np.float32)
+    maxabs = np.abs(emb).max(axis=1, initial=0.0)
+    scales = (np.maximum(maxabs, np.float32(1e-12))
+              / np.float32(127.0)).astype(np.float32)
+    codes = np.clip(np.rint(emb / scales[:, None]), -127, 127).astype(np.int8)
+    return codes, scales
+
+
+def quant_scores(codes: np.ndarray, scales: np.ndarray,
+                 queries: np.ndarray) -> np.ndarray:
+    """Dequantized full scan ``(q @ codes.T) * scales`` -> (B, N) float32.
+    The scale multiply lands on the score matrix (a per-row scale is constant
+    along d, so ``q . (s*c) == s * (q . c)`` exactly in the reals) — the same
+    operation order as the fused kernel and the sharded program. KB-row
+    chunked so the fp32 cast of the codes stays ~64MB scratch instead of a
+    full fp32 KB copy per call."""
+    B, (N, d) = queries.shape[0], codes.shape
+    s = np.empty((B, N), np.float32)
+    step = max(1, 16_000_000 // max(d, 1))
+    for i in range(0, N, step):
+        blk = codes[i:i + step].astype(np.float32)
+        s[:, i:i + step] = (queries @ blk.T) * scales[None, i:i + step]
+    return s
+
+
+def quant_gathered_scores(codes: np.ndarray, scales: np.ndarray,
+                          queries: np.ndarray, cand: np.ndarray) -> np.ndarray:
+    """:func:`gathered_scores` over an int8 KB: each query scores ITS
+    candidate rows as ``(q . code) * scale``; pad slots (``cand < 0``) at
+    ``-inf``. Same ~64MB row chunking as the fp32 path."""
+    B, C = cand.shape
+    d = codes.shape[1]
+    s = np.empty((B, C), np.float32)
+    step = max(1, 16_000_000 // max(C * d, 1))
+    for i in range(0, B, step):
+        idx = np.maximum(cand[i:i + step], 0)
+        emb = codes[idx].astype(np.float32)
+        s[i:i + step] = (np.matmul(emb, queries[i:i + step, :, None])[..., 0]
+                         * scales[idx])
+    return np.where(cand >= 0, s, -np.inf)
+
+
 def _sentinels_to_contract(ids, scores) -> Tuple[np.ndarray, np.ndarray]:
     """Device gathered-scan output -> the search_gathered contract: pad slots
     carry the NEG sentinel on device (kernels/dense_topk.NEG) with id -1;
@@ -198,9 +280,11 @@ class FlatBackend:
     """Single-host numpy scan: one BLAS matmul + canonical argpartition top-k."""
 
     name = "numpy"
+    exact = True
 
     def __init__(self, embeddings: np.ndarray):
         self.embeddings = embeddings
+        self.kb_bytes = embeddings.nbytes
         self.calls = 0
 
     def cold_shape(self, B: int, k: int) -> bool:
@@ -236,6 +320,7 @@ class KernelBackend(_JitShapeMixin):
     interpret-mode overhead would swamp the numbers)."""
 
     name = "kernel"
+    exact = True
 
     def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
         import jax
@@ -245,6 +330,7 @@ class KernelBackend(_JitShapeMixin):
         self._fn_gathered = gathered_topk
         self._force_ref = force_ref
         self._kb = jax.device_put(np.asarray(embeddings, np.float32))
+        self.kb_bytes = self._kb.nbytes
         self.calls = 0
         self._init_shapes(self._kb.shape[0])
 
@@ -277,9 +363,15 @@ class ShardedBackend(_JitShapeMixin):
     and placed shard-wise at BUILD time, so per-call work is only the
     replicated query upload; padded rows score ``-inf`` and can never reach
     the global top-k. ``calls`` counts collectives issued — the fleet's
-    one-merged-call-per-round invariant is asserted against it."""
+    one-merged-call-per-round invariant is asserted against it.
+
+    The resident representation is a subclass hook (:meth:`_encode`):
+    :class:`QuantizedShardedBackend` overrides it to place int8 codes +
+    per-row scales shard-wise instead of the fp32 matrix — same program
+    structure, same single collective."""
 
     name = "sharded"
+    exact = True
 
     def __init__(self, embeddings: np.ndarray, n_shards: Optional[int] = None,
                  axis: str = "data", mesh=None):
@@ -298,28 +390,41 @@ class ShardedBackend(_JitShapeMixin):
         self.n_total = embeddings.shape[0]
         shard_n = -(-self.n_total // self.n_shards)
         pad = shard_n * self.n_shards - self.n_total
-        padded = np.asarray(embeddings, np.float32)
+        matrix, scales = self._encode(embeddings)
         if pad:
-            padded = np.pad(padded, ((0, pad), (0, 0)))
-        self._kb = jax.device_put(jnp.asarray(padded),
+            matrix = np.pad(matrix, ((0, pad), (0, 0)))
+            if scales is not None:
+                scales = np.pad(scales, ((0, pad),))
+        self._kb = jax.device_put(jnp.asarray(matrix),
                                   NamedSharding(mesh, P(axis, None)))
+        self._scales = None if scales is None else jax.device_put(
+            jnp.asarray(scales), NamedSharding(mesh, P(axis)))
+        self.kb_bytes = matrix.nbytes + (0 if scales is None else scales.nbytes)
         self.calls = 0
         self._init_shapes(self.n_total)
 
         import functools
 
+        # `scales` is an ordinary jit argument: None is an empty pytree, so
+        # the exact and int8 variants trace to their own programs without a
+        # static flag
         @functools.partial(jax.jit, static_argnames=("k",))
-        def _scan(q, kb, k):
+        def _scan(q, kb, scales, k):
             return sharded_dense_topk(q, kb, k, self.mesh, axis=self.axis,
-                                      n_total=self.n_total)
+                                      n_total=self.n_total, scales=scales)
 
         @functools.partial(jax.jit, static_argnames=("k",))
-        def _scan_gathered(q, kb, cand, k):
+        def _scan_gathered(q, kb, scales, cand, k):
             return sharded_gathered_topk(q, kb, cand, k, self.mesh,
-                                         axis=self.axis, n_total=self.n_total)
+                                         axis=self.axis, n_total=self.n_total,
+                                         scales=scales)
 
         self._scan = _scan
         self._scan_gathered = _scan_gathered
+
+    def _encode(self, embeddings: np.ndarray):
+        """Resident representation: ``(matrix (N, d), per-row scales | None)``."""
+        return np.asarray(embeddings, np.float32), None
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
@@ -327,7 +432,8 @@ class ShardedBackend(_JitShapeMixin):
         from repro.retrieval.sharded import mesh_context
         with mesh_context(self.mesh):
             scores, gids = self._scan(jnp.asarray(queries, jnp.float32),
-                                      self._kb, min(k, self.n_total))
+                                      self._kb, self._scales,
+                                      min(k, self.n_total))
         self.calls += 1
         return np.asarray(gids, np.int64), np.asarray(scores, np.float32)
 
@@ -338,13 +444,113 @@ class ShardedBackend(_JitShapeMixin):
         from repro.retrieval.sharded import mesh_context
         with mesh_context(self.mesh):
             scores, gids = self._scan_gathered(
-                jnp.asarray(queries, jnp.float32), self._kb,
+                jnp.asarray(queries, jnp.float32), self._kb, self._scales,
                 jnp.asarray(cand, jnp.int32), min(k, cand.shape[1]))
         self.calls += 1
         return _sentinels_to_contract(gids, scores)
 
 
-BACKENDS = ("numpy", "kernel", "sharded")
+class QuantizedFlatBackend:
+    """Single-host numpy scan over the int8 KB: the quantized family's
+    reference semantics. Scores are ``(q @ codes.T) * scales`` with the scale
+    multiply on the score matrix (the kernel/sharded operation order), then
+    the same canonical top-k as :class:`FlatBackend`. Inexact by contract —
+    what it promises is recall@k >= 0.95 vs the fp32 scan, not byte-parity."""
+
+    name = "int8"
+    exact = False
+
+    def __init__(self, embeddings: np.ndarray):
+        self.codes, self.scales = quantize_kb(embeddings)
+        self.kb_bytes = self.codes.nbytes + self.scales.nbytes
+        self.calls = 0
+
+    def cold_shape(self, B: int, k: int) -> bool:
+        return False                     # nothing compiles
+
+    def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
+        return False
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        s = quant_scores(self.codes, self.scales,
+                         np.asarray(queries, np.float32))
+        self.calls += 1
+        return canonical_topk(s, k)
+
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        s = quant_gathered_scores(self.codes, self.scales,
+                                  np.asarray(queries, np.float32), cand)
+        k2 = min(k, cand.shape[1])
+        # same argument as FlatBackend: cand columns are id-sorted, pads
+        # (-inf) last, so a stable sort on score IS the canonical order
+        order = np.argsort(-s, axis=1, kind="stable")[:, :k2]
+        ids = np.take_along_axis(cand, order, axis=1).astype(np.int64)
+        self.calls += 1
+        return ids, np.take_along_axis(s, order, axis=1).astype(np.float32)
+
+
+class QuantizedKernelBackend(_JitShapeMixin):
+    """The fused Pallas dequant+matmul+top-k (`kernels.ops.quant_dense_topk`
+    / `quant_gathered_topk`): int8 codes + fp32 row scales are put on device
+    ONCE; KB tiles stream HBM -> VMEM as int8 (4x less scan traffic than the
+    fp32 kernel) and the cast + scale multiply happen on chip. ``force_ref``
+    routes to the jnp oracle exactly like :class:`KernelBackend`."""
+
+    name = "int8-kernel"
+    exact = False
+
+    def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
+        import jax
+
+        from repro.kernels.ops import quant_dense_topk, quant_gathered_topk
+        codes, scales = quantize_kb(embeddings)
+        self._fn = quant_dense_topk
+        self._fn_gathered = quant_gathered_topk
+        self._force_ref = force_ref
+        self._kb = jax.device_put(codes)
+        self._kb_scales = jax.device_put(scales)
+        self.kb_bytes = codes.nbytes + scales.nbytes
+        self.calls = 0
+        self._init_shapes(codes.shape[0])
+
+    def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        scores, ids = self._fn(jnp.asarray(queries, jnp.float32), self._kb,
+                               self._kb_scales, min(k, self._kb.shape[0]),
+                               force_ref=self._force_ref)
+        self.calls += 1
+        return np.asarray(ids, np.int64), np.asarray(scores, np.float32)
+
+    def search_gathered(self, queries: np.ndarray, cand: np.ndarray,
+                        k: int) -> Tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+        scores, ids = self._fn_gathered(jnp.asarray(queries, jnp.float32),
+                                        self._kb, self._kb_scales,
+                                        jnp.asarray(cand, jnp.int32),
+                                        min(k, cand.shape[1]),
+                                        force_ref=self._force_ref)
+        self.calls += 1
+        return _sentinels_to_contract(ids, scores)
+
+
+class QuantizedShardedBackend(ShardedBackend):
+    """Per-shard int8 residency: each device holds its slice of the code
+    matrix + row scales, dequantizes into its shard-local score matrix, and
+    the program is otherwise the fp32 sharded scan — per-shard top-k, ONE
+    all-gather per call, replicated reduce. The fleet's merged verification
+    (and ADR's merged probe) through an int8 mesh is still exactly one
+    collective per round; ``calls`` keeps counting collectives."""
+
+    name = "int8-sharded"
+    exact = False
+
+    def _encode(self, embeddings: np.ndarray):
+        return quantize_kb(embeddings)
+
+
+BACKENDS = ("numpy", "kernel", "sharded", "int8", "int8-kernel",
+            "int8-sharded")
 
 
 def make_backend(name: str, embeddings: np.ndarray, *,
@@ -352,8 +558,8 @@ def make_backend(name: str, embeddings: np.ndarray, *,
                  force_ref: bool = False) -> DenseSearchBackend:
     """CLI-name -> backend instance (the one constructor branch in the repo).
 
-    ``n_shards``/``mesh`` configure :class:`ShardedBackend` (default: one
-    shard per visible device); ``force_ref`` routes :class:`KernelBackend`
+    ``n_shards``/``mesh`` configure the sharded backends (default: one
+    shard per visible device); ``force_ref`` routes the kernel backends
     through the jnp oracle instead of the Pallas body."""
     if name == "numpy":
         return FlatBackend(embeddings)
@@ -361,4 +567,11 @@ def make_backend(name: str, embeddings: np.ndarray, *,
         return KernelBackend(embeddings, force_ref=force_ref)
     if name == "sharded":
         return ShardedBackend(embeddings, n_shards=n_shards, mesh=mesh)
+    if name == "int8":
+        return QuantizedFlatBackend(embeddings)
+    if name == "int8-kernel":
+        return QuantizedKernelBackend(embeddings, force_ref=force_ref)
+    if name == "int8-sharded":
+        return QuantizedShardedBackend(embeddings, n_shards=n_shards,
+                                       mesh=mesh)
     raise KeyError(f"unknown retrieval backend {name!r}; known: {BACKENDS}")

@@ -7,7 +7,11 @@
                                  blocked top-k, device-resident KB), or
                                  'sharded' (KB sharded over a mesh, one
                                  collective per call) — all byte-identical
-                                 under the canonical tie order.
+                                 under the canonical tie order — plus their
+                                 int8 quantized siblings ('int8' /
+                                 'int8-kernel' / 'int8-sharded': ~4x less
+                                 index memory, deterministic but inexact
+                                 under a tested recall@k >= 0.95 contract).
   * IVFRetriever         (ADR) — the TPU-native replacement for DPR-HNSW (DESIGN §3):
                                  k-means coarse quantizer + nprobe cluster scan.
                                  Cheap, less accurate, latency ~ linear in batch with
@@ -137,10 +141,11 @@ class _TimedRetriever:
 class ExactDenseRetriever(_TimedRetriever):
     """EDR: exact scan, execution strategy chosen by the backend layer.
 
-    ``backend`` is a :mod:`repro.retrieval.backends` name ('numpy' / 'kernel'
-    / 'sharded') or an already-built backend object (the serving layer builds
-    ShardedBackend with its mesh knobs); ``mesh_shards`` caps the shard count
-    for the sharded backend (0 = one shard per visible device)."""
+    ``backend`` is a :mod:`repro.retrieval.backends` name (any of
+    ``BACKENDS``, int8 quantized included) or an already-built backend object
+    (the serving layer builds ShardedBackend with its mesh knobs);
+    ``mesh_shards`` caps the shard count for the sharded backends (0 = one
+    shard per visible device)."""
 
     name = "EDR"
 
@@ -165,7 +170,7 @@ class ExactDenseRetriever(_TimedRetriever):
 class IVFRetriever(_TimedRetriever):
     """ADR: k-means coarse quantizer (host-side centroid scan) + nprobe bucket
     scan, the document scoring of which is delegated to the backend layer —
-    the same three execution strategies as EDR, via
+    the same execution strategies as EDR (int8 quantized included), via
     :meth:`~repro.retrieval.backends.DenseSearchBackend.search_gathered` over
     the fixed-shape padded bucket gather. ``backend`` / ``mesh_shards`` mean
     exactly what they do on :class:`ExactDenseRetriever`; with 'sharded', a

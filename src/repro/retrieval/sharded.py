@@ -54,7 +54,8 @@ def mesh_context(mesh):
 
 
 def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
-                       axis: str = "data", *, n_total: Optional[int] = None):
+                       axis: str = "data", *, n_total: Optional[int] = None,
+                       scales: Optional[jax.Array] = None):
     """queries (B, d) replicated; kb (N, d) sharded over `axis`.
     -> (scores (B, k), global ids (B, k)).
 
@@ -63,6 +64,13 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
     ids >= n_total are padding and score -inf. Unpadded non-divisible KBs are
     padded here instead — either way no shard ever misindexes and no padded
     id can reach the global top-k.
+
+    ``scales`` (N,) f32, when given, marks ``kb`` as int8 codes with per-row
+    symmetric scales: each shard scores its resident slice as
+    ``(q @ codes.T) * scales`` — the dequant multiply lands on the per-shard
+    score matrix before the pad mask and per-shard top-k, so only int8 codes
+    ever live in shard HBM and the collective shape is unchanged (still ONE
+    per call).
     """
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     N = kb.shape[0]
@@ -72,17 +80,22 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
     pad = shard_n * n_shards - N
     if pad:
         kb = jnp.pad(kb, ((0, pad), (0, 0)))
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, pad),))
     assert k <= n_total, f"top-{k} of a {n_total}-row KB"
     # a shard holds only shard_n rows, so it can contribute at most that many
     # global candidates; n_shards * k_local >= n_total >= k keeps the global
     # reduce exact when k exceeds the shard size
     k_local = min(k, shard_n)
 
-    def local(q, kb_shard):
+    def local(q, kb_shard, scl_shard):
         kb2 = kb_shard[0] if kb_shard.ndim == 3 else kb_shard
         shard_idx = jax.lax.axis_index(axis)
         s_full = jnp.einsum("bd,nd->bn", q.astype(jnp.float32),
                             kb2.astype(jnp.float32))
+        if scl_shard is not None:
+            scl2 = scl_shard[0] if scl_shard.ndim == 2 else scl_shard
+            s_full = s_full * scl2.astype(jnp.float32)[None, :]
         # mask padded rows BEFORE the per-shard top-k: a zero-padded row
         # scores 0.0, which would displace genuinely negative candidates
         col_gids = shard_idx * shard_n + jnp.arange(shard_n, dtype=jnp.int32)
@@ -99,20 +112,29 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
         top_g = jnp.take_along_axis(cat_g, pos, axis=1)
         return top_s, top_g
 
+    # outputs are replicated by construction (all_gather + identical top_k on
+    # every shard); the varying-axis inference can't see through axis_index
+    if scales is None:
+        fn = _shard_map(
+            lambda q, kb_shard: local(q, kb_shard, None), mesh=mesh,
+            in_specs=(P(), P(axis, None)),
+            out_specs=(P(), P()),
+            **{_CHECK_KW: False},
+        )
+        return fn(queries, kb)
     fn = _shard_map(
         local, mesh=mesh,
-        in_specs=(P(), P(axis, None)),
+        in_specs=(P(), P(axis, None), P(axis)),
         out_specs=(P(), P()),
-        # outputs are replicated by construction (all_gather + identical top_k on
-        # every shard); the varying-axis inference can't see through axis_index
         **{_CHECK_KW: False},
     )
-    return fn(queries, kb)
+    return fn(queries, kb, scales)
 
 
 def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
                           k: int, mesh, axis: str = "data", *,
-                          n_total: Optional[int] = None):
+                          n_total: Optional[int] = None,
+                          scales: Optional[jax.Array] = None):
     """The ADR/IVF probe over the sharded KB: queries (B, d) and the padded
     candidate-id matrix cand (B, C) replicated; kb (N, d) sharded over
     ``axis``. -> (scores (B, k), global ids (B, k)); pad slots (-1 in cand,
@@ -132,7 +154,12 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
     satisfy this by construction). Each shard materializes its (B, C, d)
     gather in HBM before scoring — fine while B*C*d stays well under the
     shard's KB slice; tiling C inside the shard program (still one
-    collective) is the known next step for huge-probe regimes."""
+    collective) is the known next step for huge-probe regimes.
+
+    ``scales`` (N,) f32, when given, marks ``kb`` as int8 codes with per-row
+    symmetric scales: each shard gathers its resident candidates' codes AND
+    row scales, scoring ``(q . codes) * scale`` before the residency mask —
+    the probe rides the same single collective over the int8-resident mesh."""
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     N = kb.shape[0]
     if n_total is None:
@@ -141,12 +168,14 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
     pad = shard_n * n_shards - N
     if pad:
         kb = jnp.pad(kb, ((0, pad), (0, 0)))
+        if scales is not None:
+            scales = jnp.pad(scales, ((0, pad),))
     C = cand.shape[1]
     # any single shard may hold ALL of a row's candidates, so the per-shard
     # contribution cannot be divided by n_shards
     k_local = min(k, C)
 
-    def local(q, cd, kb_shard):
+    def local(q, cd, kb_shard, scl_shard):
         kb2 = kb_shard[0] if kb_shard.ndim == 3 else kb_shard
         shard_idx = jax.lax.axis_index(axis)
         lo = shard_idx * shard_n
@@ -154,6 +183,10 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
         emb = jnp.take(kb2, jnp.clip(cd - lo, 0, shard_n - 1), axis=0)
         s = jnp.einsum("bcd,bd->bc", emb.astype(jnp.float32),
                        q.astype(jnp.float32))
+        if scl_shard is not None:
+            scl2 = scl_shard[0] if scl_shard.ndim == 2 else scl_shard
+            scl = jnp.take(scl2, jnp.clip(cd - lo, 0, shard_n - 1), axis=0)
+            s = s * scl.astype(jnp.float32)
         s = jnp.where(own, s, NEG)
         gids = jnp.where(own, cd, -1)          # non-resident/pad: sentinel id
         s_l, pos = jax.lax.top_k(s, k_local)
@@ -167,13 +200,21 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
         top_g = jnp.take_along_axis(cat_g, p, axis=1)
         return top_s, top_g
 
+    if scales is None:
+        fn = _shard_map(
+            lambda q, cd, kb_shard: local(q, cd, kb_shard, None), mesh=mesh,
+            in_specs=(P(), P(), P(axis, None)),
+            out_specs=(P(), P()),
+            **{_CHECK_KW: False},
+        )
+        return fn(queries, cand.astype(jnp.int32), kb)
     fn = _shard_map(
         local, mesh=mesh,
-        in_specs=(P(), P(), P(axis, None)),
+        in_specs=(P(), P(), P(axis, None), P(axis)),
         out_specs=(P(), P()),
         **{_CHECK_KW: False},
     )
-    return fn(queries, cand.astype(jnp.int32), kb)
+    return fn(queries, cand.astype(jnp.int32), kb, scales)
 
 
 def lower_sharded_retrieval(mesh, *, n_docs: int = 1_048_576, d: int = 256,

@@ -5,6 +5,12 @@ canonical tie order (score desc, id asc), across batch sizes, k values,
 tie-heavy KBs, and KB sizes that don't divide the shard count; and the serving
 paths reach the sharded backend with exactly ONE collective per KB call.
 
+The int8 quantized family (int8 / int8-kernel / int8-sharded) is tested to a
+different contract — mutual parity within the family (one shared quantization)
+plus SELF-consistency through the serving paths (fleet == RaLMSeq on the same
+inexact backend) and the same one-collective ledger; its recall-vs-fp32
+contract lives in tests/test_quantized.py.
+
 Cross-backend byte-equality is only meaningful when the scores themselves are
 bit-equal across numpy-BLAS and XLA reductions, so the parity KBs use
 grid-quantized embeddings (entries in multiples of 1/2, d small): every dot
@@ -123,12 +129,55 @@ def test_canonical_topk_tie_order():
 
 
 def test_make_backend_names():
+    from repro.retrieval.backends import BACKENDS
     emb = _grid(np.random.default_rng(2), 32, 8)
-    assert make_backend("numpy", emb).name == "numpy"
-    assert make_backend("kernel", emb).name == "kernel"
-    assert make_backend("sharded", emb, n_shards=2).name == "sharded"
+    for name in BACKENDS:
+        b = make_backend(name, emb, n_shards=2)
+        assert b.name == name
+        # the capability bit the preservation matrix keys on: fp32 strategies
+        # are exact (byte-parity contractual), int8 strategies are not
+        assert b.exact is (not name.startswith("int8"))
+        assert b.kb_bytes > 0
     with pytest.raises(KeyError):
         make_backend("faiss", emb)
+
+
+def test_quantized_trio_mutual_parity(four_devices):
+    """int8 == int8-kernel == int8-sharded on ids AND scores — all three
+    score the SAME code matrix (one host-side quantize_kb) with the same
+    operation order, so within the quantized family the cross-strategy
+    byte-parity discipline survives. Scores compare within atol only: the
+    numpy path sums via BLAS, the jit paths via XLA."""
+    rng = np.random.default_rng(21)
+    for n, d in [(96, 16), (130, 8)]:
+        emb = _grid(rng, n, d)
+        flat = make_backend("int8", emb)
+        kern = make_backend("int8-kernel", emb)
+        shard = make_backend("int8-sharded", emb, n_shards=4)
+        assert shard.n_shards == 4
+        for B in (1, 3):
+            qs = _grid(rng, B, d)
+            for k in (1, 5, 40):
+                fi, fs = flat.search(qs, k)
+                ki, ks = kern.search(qs, k)
+                si, ss = shard.search(qs, k)
+                tag = f"n={n} B={B} k={k}"
+                assert np.array_equal(fi, ki), f"{tag}: int8 vs int8-kernel"
+                assert np.array_equal(fi, si), f"{tag}: int8 vs int8-sharded"
+                np.testing.assert_allclose(fs, ks, atol=1e-5, rtol=1e-5)
+                np.testing.assert_allclose(fs, ss, atol=1e-5, rtol=1e-5)
+
+
+def test_int8_sharded_one_collective_per_search(four_devices):
+    """The quantized mesh keeps the collective ledger: one per search, dense
+    and gathered alike."""
+    rng = np.random.default_rng(23)
+    shard = make_backend("int8-sharded", _grid(rng, 100, 16), n_shards=4)
+    for i in range(3):
+        shard.search(_grid(rng, 2, 16), 4)
+    cand = np.sort(rng.choice(100, size=(2, 10), replace=False), axis=1)
+    shard.search_gathered(_grid(rng, 2, 16), cand.astype(np.int64), 4)
+    assert shard.calls == 4
 
 
 # ---------------------------------------------------------------------------------
@@ -211,7 +260,11 @@ def test_adr_gathered_pad_slots_are_sentinels(four_devices, width):
     k = 8
     for name, be in [("numpy", FlatBackend(emb)),
                      ("kernel", KernelBackend(emb)),
-                     ("sharded", ShardedBackend(emb, n_shards=4))]:
+                     ("sharded", ShardedBackend(emb, n_shards=4)),
+                     ("int8", make_backend("int8", emb)),
+                     ("int8-kernel", make_backend("int8-kernel", emb)),
+                     ("int8-sharded", make_backend("int8-sharded", emb,
+                                                   n_shards=4))]:
         ids, sc = be.search_gathered(qs, cand, k)
         assert ids.shape == (2, 8), name
         assert np.all(ids[0, 5:] == -1) and np.all(ids[1, 1:] == -1), name
@@ -454,12 +507,82 @@ def test_adr_kernel_fleet_serve_parity(serve_stack):
     assert [r.tokens for r in fr.results] == want
 
 
+@pytest.mark.parametrize("async_rounds", [False, True])
+def test_int8_sharded_fleet_serve_self_consistency(four_devices, serve_stack,
+                                                   async_rounds):
+    """The INEXACT contract's preservation surface: fleet-served EDR through
+    the int8 mesh == per-request RaLMSeq through the SAME int8 backend (the
+    speculate+verify loop needs determinism, not exactness — both paths see
+    one and the same quantized scan), with exactly one collective per
+    verification round (plus the seed call). The fp32-baseline byte-parity
+    claim is deliberately NOT made here."""
+    from repro.core.ralmspec import RaLMSeq
+    from repro.serving.fleet import FleetServer
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    retr_seq = ExactDenseRetriever(dkb, backend="int8-sharded", mesh_shards=4)
+    want = [RaLMSeq(seng, retr_seq, _rcfg(), enc).serve(p).tokens
+            for p in prompts]
+    retr = ExactDenseRetriever(dkb, backend="int8-sharded", mesh_shards=4)
+    assert retr.backend.n_shards == 4 and retr.backend.exact is False
+    with FleetServer(beng, retr, _rcfg(), enc,
+                     async_rounds=async_rounds) as fleet:
+        fr = fleet.serve(prompts)
+    assert [r.tokens for r in fr.results] == want, \
+        "int8-sharded fleet diverged from RaLMSeq on the same backend"
+    assert retr.backend.calls == fr.kb_calls == fr.rounds + 1
+
+
+def test_int8_adr_continuous_serve_self_consistency(four_devices, serve_stack):
+    """Continuous batching over the int8-sharded ADR probe: self-consistent
+    with RaLMSeq on the same backend under churn, one collective per KB
+    call."""
+    from repro.core.ralmspec import RaLMSeq
+    from repro.serving.continuous import ContinuousFleetServer, as_requests
+    from repro.serving.batched import BatchedServeEngine
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = [RaLMSeq(seng, _adr_retr(dkb, backend="int8-sharded"), _rcfg(),
+                    enc).serve(p).tokens for p in prompts]
+    retr = _adr_retr(dkb, backend="int8-sharded")
+    eng2 = BatchedServeEngine(beng.model, beng.params, 2, cache_window=256)
+    server = ContinuousFleetServer(eng2, retr, _rcfg(), enc)
+    cr = server.serve(as_requests(prompts, [0.0, 0.0, 1.0]))
+    assert [r.tokens for r in cr.results] == want, \
+        "int8-sharded ADR continuous fleet diverged from same-backend RaLMSeq"
+    assert retr.backend.calls == retr.stats.calls
+
+
 def test_serve_rejects_unsupported_backend_combo():
     """build_stack enforces the same support table the CLI validates against:
-    SR alone rejects non-numpy backends."""
+    SR alone rejects non-numpy backends — and the rejection NAMES the valid
+    backends for the chosen retriever, not just the bad combo."""
     from repro.launch.serve import BACKEND_SUPPORT, build_stack
+    from repro.retrieval.backends import BACKENDS
     assert BACKEND_SUPPORT["sr"] == ("numpy",)
-    assert set(BACKEND_SUPPORT["edr"]) == set(BACKEND_SUPPORT["adr"]) \
-        == {"numpy", "kernel", "sharded"}
-    with pytest.raises(ValueError, match="does not support"):
-        build_stack("sr", n_docs=50, backend="sharded")
+    assert tuple(BACKEND_SUPPORT["edr"]) == tuple(BACKEND_SUPPORT["adr"]) \
+        == BACKENDS
+    for bad in ("sharded", "int8", "int8-sharded"):
+        with pytest.raises(ValueError, match="does not support") as ei:
+            build_stack("sr", n_docs=50, backend=bad)
+        assert "supported: numpy" in str(ei.value), \
+            "rejection must list the valid backends for the retriever"
+
+
+def test_serve_cli_rejection_lists_supported_backends():
+    """The CLI path of the same satellite: `--retriever sr
+    --retriever-backend int8` exits 2 with a message naming the supported
+    set, before any stack is built."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--retriever", "sr",
+         "--retriever-backend", "int8"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 2, out.stderr[-1500:]
+    assert "does not support" in out.stderr
+    assert "supported: numpy" in out.stderr
+    assert "Traceback" not in out.stderr

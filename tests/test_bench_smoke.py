@@ -1,7 +1,9 @@
 """Benchmark smoke: every benchmarks/bench_*.py runs end to end at tiny sizes
 with ``--json`` and emits a schema-valid payload (expected keys present, all
 latencies finite) — so the BENCH_*.json producers can't silently rot between
-the PRs that actually read their numbers.
+the PRs that actually read their numbers. The same checkers also validate
+every BENCH_*.json committed at the repo root, catching stale bench files
+whose schema a later PR widened (e.g. the int8 quantized rows).
 
 Marked ``bench_smoke`` and deselected from the fast tier (pytest.ini); CI runs
 this in its own bench-smoke job (.github/workflows/ci.yml).
@@ -112,12 +114,28 @@ def _check_backends(payload):
     assert rows, "no rows emitted"
     for r in rows:
         assert set(r) >= {"backend", "retriever", "n_docs", "batch",
-                          "seconds", "us_per_query"}, r
+                          "seconds", "us_per_query", "exact", "recall_at_k",
+                          "kb_bytes"}, r
         assert _finite(r["seconds"]) and r["seconds"] >= 0, r
+        assert isinstance(r["exact"], bool), r
+        assert r["exact"] is (not r["backend"].startswith("int8")), r
+        assert _finite(r["recall_at_k"]) and 0 <= r["recall_at_k"] <= 1, r
+        # exact backends are byte-parity vs the numpy reference scan; the
+        # int8 family is held to the tested recall contract instead
+        assert r["recall_at_k"] >= (0.99 if r["exact"] else 0.95), r
+        assert isinstance(r["kb_bytes"], int) and r["kb_bytes"] > 0, r
     # the --retriever both sweep must cover the full backend x retriever grid
     cells = {(r["backend"], r["retriever"]) for r in rows}
-    assert cells == {(b, a) for b in ("numpy", "kernel", "sharded")
+    assert cells == {(b, a)
+                     for b in ("numpy", "kernel", "sharded", "int8",
+                               "int8-kernel", "int8-sharded")
                      for a in ("edr", "adr")}, cells
+    # the int8 index is materially smaller than fp32 on the same KB
+    # (1 byte/dim + 4 bytes/row of scale vs 4 bytes/dim: > 3x for d >= 16)
+    by_kb = {(r["backend"], r["n_docs"]): r["kb_bytes"] for r in rows}
+    for (b, n), nbytes in by_kb.items():
+        if b == "int8":
+            assert by_kb[("numpy", n)] / nbytes > 3, (n, nbytes)
 
 
 def _check_shared_cache(payload):
@@ -144,6 +162,22 @@ def _check_shared_cache(payload):
 CHECKS = dict(csv=_check_csv, fleet=_check_fleet, continuous=_check_continuous,
               async_fleet=_check_async_fleet, backends=_check_backends,
               shared_cache=_check_shared_cache)
+
+
+def test_committed_bench_json_files_are_schema_valid():
+    """Every BENCH_*.json committed at the repo root must still satisfy the
+    schema its producer is held to — so a bench file can't silently go stale
+    when a later PR widens the payload (e.g. the int8 rows adding
+    exact/recall_at_k/kb_bytes to BENCH_backends.json)."""
+    import glob
+    committed = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    assert committed, "no committed BENCH_*.json at repo root"
+    for path in committed:
+        with open(path) as f:
+            payload = json.load(f)
+        kind = payload.get("bench")
+        assert kind in CHECKS, (path, kind)
+        CHECKS[kind](payload)
 
 
 def test_every_bench_script_has_a_smoke_entry():

@@ -7,7 +7,10 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.dense_topk import dense_topk_pallas
+from repro.kernels.dense_topk import (dense_topk_pallas,
+                                      quant_gathered_topk_pallas,
+                                      quant_topk_pallas)
+from repro.retrieval.backends import quantize_kb
 
 
 @pytest.mark.parametrize("B,N,d,k", [
@@ -46,6 +49,77 @@ def test_dense_topk_block_boundary_ids():
     q = np.zeros((1, d), np.float32)
     q[0, 0] = 1.0
     s, i = dense_topk_pallas(jnp.asarray(q), jnp.asarray(kb), len(hot),
+                             block_n=256, interpret=True)
+    assert list(np.asarray(i[0])) == hot
+
+
+# --------------------------------------------------------------------------------------
+# int8 fused dequant+matmul+top-k kernels
+# --------------------------------------------------------------------------------------
+@pytest.mark.parametrize("B,N,d,k,block_n", [
+    (1, 257, 32, 1, 1024), (4, 1000, 64, 8, 1024), (3, 130, 16, 4, 1024),
+    (2, 700, 8, 6, 256),            # several KB tiles, ids cross boundaries
+    (8, 2048, 64, 16, 512),
+])
+def test_quant_topk_matches_ref(B, N, d, k, block_n):
+    kq, kk = jax.random.split(jax.random.PRNGKey(B * N + k))
+    q = jax.random.normal(kq, (B, d), jnp.float32)
+    codes, scales = quantize_kb(np.asarray(
+        jax.random.normal(kk, (N, d), jnp.float32)))
+    s_k, i_k = quant_topk_pallas(q, jnp.asarray(codes), jnp.asarray(scales),
+                                 k, block_n=block_n, interpret=True)
+    s_r, i_r = ref.quant_dense_topk_ref(q, jnp.asarray(codes),
+                                        jnp.asarray(scales), k)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+
+
+@pytest.mark.parametrize("B,N,C,d,k,block_c", [
+    (2, 300, 64, 16, 8, 512), (3, 500, 130, 32, 5, 64),
+    (1, 128, 16, 8, 16, 512),       # k > real candidates -> pad sentinels
+])
+def test_quant_gathered_topk_matches_ref(B, N, C, d, k, block_c):
+    """ADR-probe path: gathered int8 candidates + per-candidate scales, with
+    ragged candidate rows (-1 padding) and block_c crossing tile boundaries."""
+    ks = jax.random.split(jax.random.PRNGKey(N + C), 3)
+    q = jax.random.normal(ks[0], (B, d), jnp.float32)
+    codes, scales = quantize_kb(np.asarray(
+        jax.random.normal(ks[1], (N, d), jnp.float32)))
+    cand = np.full((B, C), -1, np.int64)
+    g = np.random.default_rng(C)
+    for b in range(B):
+        w = int(g.integers(1, min(C, N)))
+        cand[b, :w] = np.sort(g.choice(N, size=w, replace=False))
+    safe = np.maximum(cand, 0)
+    cand_emb = jnp.asarray(codes[safe])
+    cand_scl = jnp.asarray(scales[safe])
+    cand_j = jnp.asarray(cand, jnp.int32)
+    s_k, i_k = quant_gathered_topk_pallas(q, cand_emb, cand_scl, cand_j, k,
+                                          block_c=block_c, interpret=True)
+    s_r, i_r = ref.quant_gathered_topk_ref(q, cand_emb, cand_scl, cand_j, k)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+    # pad slots surface the canonical sentinels
+    n_real = int((cand[0] >= 0).sum())
+    if k > n_real:
+        assert np.all(np.asarray(i_k)[0, n_real:] == -1)
+
+
+def test_quant_topk_block_boundary_ids():
+    """Global ids stay correct when hot docs straddle int8 KB tiles."""
+    d, N = 8, 700
+    emb = np.zeros((N, d), np.float32)
+    hot = [3, 255, 256, 511, 512, 699]
+    for rank, idx in enumerate(hot):
+        emb[idx, 0] = 10.0 - rank
+    emb[:, 1] = 0.01                    # keep every row's scale positive
+    codes, scales = quantize_kb(emb)
+    q = np.zeros((1, d), np.float32)
+    q[0, 0] = 1.0
+    s, i = quant_topk_pallas(jnp.asarray(q), jnp.asarray(codes),
+                             jnp.asarray(scales), len(hot),
                              block_n=256, interpret=True)
     assert list(np.asarray(i[0])) == hot
 

@@ -7,6 +7,13 @@ claim extended to the fleet path:
       outputs for EDR/ADR/SR at concurrency >= 2, and
   (c) mis-speculation in one fleet slot never perturbs sibling slots.
 
+The claim is keyed on each backend's ``exact`` capability bit: EXACT backends
+(numpy/kernel/sharded) are held to the cross-backend baseline — fleet through
+backend X == RaLMSeq through numpy; INEXACT int8 backends are held to
+self-consistency — fleet through X == RaLMSeq through the SAME X (the
+speculate+verify loop needs one deterministic scan, not an exact one; the
+recall-vs-fp32 contract lives in tests/test_quantized.py).
+
 Engines are module-scoped (start() resets them) so the jit caches are shared
 across tests — the fast tier pays each prefill shape once.
 """
@@ -104,6 +111,37 @@ def test_fleet_output_preservation(stack, retr_name):
     # cross-request batched verification: ONE KB call per round (+ the initial
     # prefetch call), regardless of concurrency
     assert fr.kb_calls == fr.rounds + 1
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "sharded", "int8",
+                                     "int8-kernel", "int8-sharded"])
+def test_fleet_preservation_matrix_keyed_on_exact_bit(stack, backend):
+    """One matrix, two contracts, selected by the backend's `exact` bit:
+    exact backends byte-match the numpy-backend RaLMSeq baseline (swapping
+    the execution strategy may not perturb a served token); inexact int8
+    backends byte-match RaLMSeq run through the SAME backend object
+    (self-consistency), and either way the fleet still merges to one KB call
+    per round. (Sharded backends collapse to a single shard on the 1-device
+    CI leg — the program shape, not the shard count, is what preservation
+    keys on.)"""
+    from repro.retrieval.backends import BACKENDS
+    assert backend in BACKENDS
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    retr = ExactDenseRetriever(dkb, backend=backend)
+    base_retr = ExactDenseRetriever(dkb) if retr.backend.exact else retr
+    assert retr.backend.exact is (not backend.startswith("int8"))
+    seq_tokens = [RaLMSeq(seng, base_retr, RCFG, enc).serve(p).tokens
+                  for p in prompts]
+    fr = FleetServer(beng, retr, RCFG, enc).serve(prompts)
+    contract = "parity-vs-numpy" if retr.backend.exact else "self-consistency"
+    for i, r in enumerate(fr.results):
+        assert r.tokens == seq_tokens[i], \
+            f"{backend}: slot {i} broke {contract}"
+    assert fr.kb_calls == fr.rounds + 1
+    if backend.endswith("sharded"):
+        # one collective per KB call, fp32 and int8 meshes alike — note the
+        # baseline RaLMSeq calls above also ride retr.backend when inexact
+        assert retr.backend.calls == retr.stats.calls
 
 
 def test_fleet_variants_preserve_outputs(stack):

@@ -1,0 +1,131 @@
+"""Hypothesis property tests for the int8 quantize/dequantize round-trip and
+the bounded-miss theorem behind the recall contract (the deterministic
+recall-grid acceptance tests live in tests/test_quantized.py, which runs with
+or without hypothesis).
+
+Properties pinned here: scale positivity, max-abs preservation per row,
+per-element dequant error <= scale/2, identical-row monotone ordering
+(duplicates quantize identically, ties resolve id-ascending),
+numpy-vs-jit quantized-scan parity on ids (scores within atol), and the
+PROVABLE 2*eps bounded-miss theorem: with eps = (max_scale/2) * ||q||_1, a
+doc whose exact score clears the selection boundary by more than 2*eps can
+never be dropped by the quantized scan.
+"""
+import numpy as np
+import pytest
+
+from repro.retrieval.backends import QuantizedFlatBackend, quantize_kb
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+
+@st.composite
+def float_kb(draw):
+    """Adversarial float KBs: mixed magnitudes per row (up to 1e3), so
+    per-row scaling actually matters."""
+    n = draw(st.integers(4, 48))
+    d = draw(st.sampled_from([3, 8, 17]))
+    seed = draw(st.integers(0, 10_000))
+    g = np.random.default_rng(seed)
+    mag = 10.0 ** g.uniform(-2, 3, size=(n, 1))
+    emb = (g.standard_normal((n, d)) * mag).astype(np.float32)
+    q = g.standard_normal(d).astype(np.float32)
+    return emb, q
+
+
+@given(float_kb())
+@settings(max_examples=80, deadline=None)
+def test_roundtrip_scale_and_error_bounds(case):
+    """Scales strictly positive; 127*scale recovers each row's max-abs to a
+    few ulp; per-element dequant error <= scale/2 (+ float slack); codes
+    never exceed the symmetric range."""
+    emb, _ = case
+    codes, scales = quantize_kb(emb)
+    assert codes.dtype == np.int8 and scales.dtype == np.float32
+    assert np.all(scales > 0)
+    assert np.all(np.abs(codes.astype(np.int32)) <= 127)
+    maxabs = np.abs(emb).max(axis=1)
+    np.testing.assert_allclose(127.0 * scales, np.maximum(maxabs, 1e-12),
+                               rtol=1e-5)
+    deq = codes.astype(np.float32) * scales[:, None]
+    err = np.abs(deq - emb)
+    assert np.all(err <= 0.5 * scales[:, None] * (1 + 1e-5) + 1e-30)
+
+
+@given(float_kb(), st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_duplicated_rows_quantize_identically(case, seed):
+    """Duplicate a random row over the KB: all copies must get identical
+    codes AND scales (quantization is a pure per-row function). The monotone
+    id-ascending ordering of the tied duplicates is then asserted on a
+    grid-quantized KB, where every dot is exactly representable — on
+    arbitrary floats BLAS legitimately yields position-dependent ulp
+    differences for identical columns, so 'identical rows' only implies
+    'exactly tied scores' when the arithmetic is exact."""
+    emb, q = case
+    g = np.random.default_rng(seed)
+    src = int(g.integers(0, emb.shape[0]))
+    dupes = sorted(set(g.integers(0, emb.shape[0], 5).tolist()) | {src})
+    emb = emb.copy()
+    emb[dupes] = emb[src]
+    codes, scales = quantize_kb(emb)
+    for i in dupes:
+        assert np.array_equal(codes[i], codes[src]) and scales[i] == scales[src]
+    emb_g = np.clip(np.rint(emb), -8, 8).astype(np.float32) / 2.0
+    emb_g[dupes] = emb_g[src]
+    q_g = np.clip(np.rint(q), -6, 6).astype(np.float32) / 2.0
+    ids, scores = QuantizedFlatBackend(emb_g).search(q_g[None], len(dupes))
+    got = [int(i) for i in ids[0] if int(i) in dupes]
+    assert got == sorted(got), "tied duplicates must come back id-ascending"
+
+
+@given(float_kb())
+@settings(max_examples=50, deadline=None)
+def test_numpy_vs_jit_quantized_scan_parity(case):
+    """kernel == numpy-quantized on ids (scores within atol): both paths
+    score the SAME codes with the same operation order, so any id split can
+    only come from summation-order ulp on genuinely near-tied scores — on
+    grid-quantized queries (multiples of 1/2) even those vanish and ids must
+    match exactly."""
+    from repro.kernels.ops import quant_dense_topk
+    emb, q = case
+    d = emb.shape[1]
+    g = np.random.default_rng(int(abs(emb[0, 0]) * 1e3) % 997)
+    qs = (g.integers(-6, 7, size=(3, d)) / 2.0).astype(np.float32)
+    # grid-quantize the KB too: products & partial sums exactly representable
+    emb_g = np.clip(np.rint(emb), -8, 8).astype(np.float32) / 2.0
+    codes, scales = quantize_kb(emb_g)
+    k = min(5, emb.shape[0])
+    ni, ns = QuantizedFlatBackend(emb_g).search(qs, k)
+    js, ji = quant_dense_topk(qs, codes, scales, k, force_ref=True)
+    assert np.array_equal(ni, np.asarray(ji, np.int64))
+    np.testing.assert_allclose(ns, np.asarray(js), atol=1e-5, rtol=1e-5)
+
+
+@given(float_kb(), st.integers(1, 8))
+@settings(max_examples=80, deadline=None)
+def test_bounded_miss_theorem(case, k):
+    """The provable core of the recall contract. Per-element dequant error
+    <= scale/2 bounds every doc's score error by
+    eps = (max_scale / 2) * ||q||_1; hence any exact-top-k doc the quantized
+    top-k misses has exact score within 2*eps of the LOWEST selected doc's
+    exact score. Quantization can only swap near-equals — a doc separated
+    from the boundary by more than 2*eps can never be dropped."""
+    emb, q = case
+    k = min(k, emb.shape[0])
+    codes, scales = quantize_kb(emb)
+    exact_scores = (emb @ q).astype(np.float64)
+    ids, _ = QuantizedFlatBackend(emb).search(q[None], k)
+    sel = set(int(i) for i in ids[0])
+    eps = float(scales.max()) / 2.0 * float(np.abs(q).sum())
+    boundary = min(exact_scores[i] for i in sel)
+    missed = [i for i in np.argsort(-exact_scores)[:k] if i not in sel]
+    slack = 2.0 * eps * (1 + 1e-5) + 1e-5
+    for m in missed:
+        assert exact_scores[m] <= boundary + slack, \
+            (f"doc {m} (exact {exact_scores[m]:.6g}) dropped though "
+             f"{exact_scores[m] - boundary:.3g} above the boundary; "
+             f"2*eps = {2 * eps:.3g}")
