@@ -93,9 +93,9 @@ def bench_one(retr_name, levels, args):
     for c in levels:
         eng = BatchedServeEngine(model, params, c, cache_window=512)
         warm_engine(eng, rcfg)
-        sync = FleetServer(eng, retr, rcfg, enc, async_rounds=False)
-        sync.serve(prompts[:c])            # warmup: jit + stats calibration
-        s = serve_all(sync, prompts, c)
+        with FleetServer(eng, retr, rcfg, enc, async_rounds=False) as sync:
+            sync.serve(prompts[:c])        # warmup: jit + stats calibration
+            s = serve_all(sync, prompts, c)
         with FleetServer(eng, retr, rcfg, enc, async_rounds=True) as a_fleet:
             a = serve_all(a_fleet, prompts, c)
         assert a["outputs"] == s["outputs"], \

@@ -79,42 +79,43 @@ def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
     budgets = request_budgets(n_requests, max_new)
     eng = BatchedServeEngine(model, params, slots, cache_window=512)
     warm_engine(eng, rcfg)
-    cont = ContinuousFleetServer(eng, retr, rcfg, enc)
-    fleet = FleetServer(eng, retr, rcfg, enc)
-    cont.serve(as_requests(prompts[:slots]))    # warmup: jit + stats calibration
-
     print(f"\n== {retr_name.upper()}  ({n_docs} docs, {n_requests} requests, "
           f"{slots} slots, budgets {min(budgets)}..{max(budgets)} tok, "
           f"s={stride}) ==")
     print(f"{'rate':>6} {'sched':>11} {'tok/s (modeled)':>16} "
           f"{'tok/s (wall)':>13} {'p50':>8} {'p99':>8} {'makespan':>9}")
     rows = []
-    for rate in rates:
-        arrivals = make_arrivals(n_requests, rate, seed=seed)
-        cr = cont.serve(as_requests(prompts, arrivals, budgets))
-        fx = serve_fixed(fleet, prompts, arrivals, budgets, slots)
-        tp_c, tp_f = cr.throughput(), fx["tokens"] / max(fx["makespan"], 1e-9)
-        tag = f"{rate:g}" if rate > 0 else "sat"
-        print(f"{tag:>6} {'continuous':>11} {tp_c:>16.1f} "
-              f"{cr.throughput(modeled=False):>13.1f} {cr.p50:>7.2f}s "
-              f"{cr.p99:>7.2f}s {cr.analytic_time:>8.2f}s")
-        print(f"{'':>6} {'fixed':>11} {tp_f:>16.1f} "
-              f"{fx['tokens'] / max(fx['wall'], 1e-9):>13.1f} "
-              f"{percentile(fx['lats'], 50):>7.2f}s "
-              f"{percentile(fx['lats'], 99):>7.2f}s {fx['makespan']:>8.2f}s")
-        print(f"{'':>6} {'':>11} continuous/fixed modeled throughput "
-              f"x{tp_c / max(tp_f, 1e-9):.2f}")
-        rows.append(dict(
-            rate=rate,
-            continuous=dict(tokps_modeled=tp_c,
-                            tokps_wall=cr.throughput(modeled=False),
-                            p50_s=cr.p50, p99_s=cr.p99,
-                            makespan_s=cr.analytic_time),
-            fixed=dict(tokps_modeled=tp_f,
-                       tokps_wall=fx["tokens"] / max(fx["wall"], 1e-9),
-                       p50_s=percentile(fx["lats"], 50),
-                       p99_s=percentile(fx["lats"], 99),
-                       makespan_s=fx["makespan"])))
+    # context managers: the (potential) verification workers are released
+    # even if a serve raises mid-sweep
+    with ContinuousFleetServer(eng, retr, rcfg, enc) as cont, \
+            FleetServer(eng, retr, rcfg, enc) as fleet:
+        cont.serve(as_requests(prompts[:slots]))  # warmup: jit + stats calibration
+        for rate in rates:
+            arrivals = make_arrivals(n_requests, rate, seed=seed)
+            cr = cont.serve(as_requests(prompts, arrivals, budgets))
+            fx = serve_fixed(fleet, prompts, arrivals, budgets, slots)
+            tp_c, tp_f = cr.throughput(), fx["tokens"] / max(fx["makespan"], 1e-9)
+            tag = f"{rate:g}" if rate > 0 else "sat"
+            print(f"{tag:>6} {'continuous':>11} {tp_c:>16.1f} "
+                  f"{cr.throughput(modeled=False):>13.1f} {cr.p50:>7.2f}s "
+                  f"{cr.p99:>7.2f}s {cr.analytic_time:>8.2f}s")
+            print(f"{'':>6} {'fixed':>11} {tp_f:>16.1f} "
+                  f"{fx['tokens'] / max(fx['wall'], 1e-9):>13.1f} "
+                  f"{percentile(fx['lats'], 50):>7.2f}s "
+                  f"{percentile(fx['lats'], 99):>7.2f}s {fx['makespan']:>8.2f}s")
+            print(f"{'':>6} {'':>11} continuous/fixed modeled throughput "
+                  f"x{tp_c / max(tp_f, 1e-9):.2f}")
+            rows.append(dict(
+                rate=rate,
+                continuous=dict(tokps_modeled=tp_c,
+                                tokps_wall=cr.throughput(modeled=False),
+                                p50_s=cr.p50, p99_s=cr.p99,
+                                makespan_s=cr.analytic_time),
+                fixed=dict(tokps_modeled=tp_f,
+                           tokps_wall=fx["tokens"] / max(fx["wall"], 1e-9),
+                           p50_s=percentile(fx["lats"], 50),
+                           p99_s=percentile(fx["lats"], 99),
+                           makespan_s=fx["makespan"])))
     return rows
 
 

@@ -50,17 +50,17 @@ def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
     for c in levels:
         eng = BatchedServeEngine(model, params, c, cache_window=512)
         warm_engine(eng, rcfg)
-        fleet = FleetServer(eng, retr, rcfg, enc)
-        fleet.serve(prompts[:c])                 # warmup: jit + stats calibration
         tot_an = tot_w = 0.0
         n_tok = calls = queries = 0
-        for i in range(0, len(prompts), c):
-            fr = fleet.serve(prompts[i:i + c])
-            tot_an += fr.analytic_time
-            tot_w += fr.wall_time
-            n_tok += fr.total_tokens
-            calls += fr.kb_calls
-            queries += fr.kb_queries
+        with FleetServer(eng, retr, rcfg, enc) as fleet:
+            fleet.serve(prompts[:c])             # warmup: jit + stats calibration
+            for i in range(0, len(prompts), c):
+                fr = fleet.serve(prompts[i:i + c])
+                tot_an += fr.analytic_time
+                tot_w += fr.wall_time
+                n_tok += fr.total_tokens
+                calls += fr.kb_calls
+                queries += fr.kb_queries
         tp_m = n_tok / max(tot_an, 1e-9)
         tp_w = n_tok / max(tot_w, 1e-9)
         lat = tot_an / max(-(-len(prompts) // c), 1)

@@ -80,34 +80,34 @@ def bench_one(retr_name: str, rates, args):
                                  args.zipf, args.seed)
     eng = BatchedServeEngine(model, params, args.slots, cache_window=512)
     warm_engine(eng, rcfg)
-    off_server = ContinuousFleetServer(eng, retr, rcfg, enc)
-    off_server.serve(as_requests(prompts[:args.slots]))   # warmup: jit + stats
-
     print(f"\n== {retr_name.upper()}  ({args.n_docs} docs, {args.requests} "
           f"requests over {args.distinct} distinct prompts, zipf "
           f"{args.zipf:g}, {args.slots} slots, {args.max_new} tok) ==")
     print(f"{'rate':>6} {'shared':>7} {'p50':>8} {'p99':>8} {'makespan':>9} "
           f"{'kb rows':>8} {'dedup saved':>12} {'hit rate':>9}")
     rows = []
-    for rate in rates:
-        arrivals = make_arrivals(args.requests, rate, seed=args.seed)
-        off, toks_off = serve_mode(off_server, prompts, arrivals, None)
-        shared = SharedRetrievalCache(capacity=args.shared_capacity)
-        on_server = ContinuousFleetServer(eng, retr, rcfg, enc,
-                                          shared_cache=shared)
-        on, toks_on = serve_mode(on_server, prompts, arrivals, shared)
-        assert toks_on == toks_off, \
-            "shared cache changed outputs (preservation violated)"
-        tag = f"{rate:g}" if rate > 0 else "sat"
-        for label, cell in (("off", off), ("on", on)):
-            hr = (f"{cell['shared_hit_rate']:>8.0%}"
-                  if "shared_hit_rate" in cell else f"{'-':>8}")
-            print(f"{tag if label == 'off' else '':>6} {label:>7} "
-                  f"{cell['p50_s']:>7.2f}s {cell['p99_s']:>7.2f}s "
-                  f"{cell['makespan_s']:>8.2f}s {cell['kb_queries']:>8} "
-                  f"{cell['merged_rows_saved']:>12} {hr}")
-        rows.append(dict(rate=rate, off=off, on=on,
-                         outputs_identical=True))
+    # context managers: worker threads released even if a serve raises
+    with ContinuousFleetServer(eng, retr, rcfg, enc) as off_server:
+        off_server.serve(as_requests(prompts[:args.slots]))  # warmup: jit + stats
+        for rate in rates:
+            arrivals = make_arrivals(args.requests, rate, seed=args.seed)
+            off, toks_off = serve_mode(off_server, prompts, arrivals, None)
+            shared = SharedRetrievalCache(capacity=args.shared_capacity)
+            with ContinuousFleetServer(eng, retr, rcfg, enc,
+                                       shared_cache=shared) as on_server:
+                on, toks_on = serve_mode(on_server, prompts, arrivals, shared)
+            assert toks_on == toks_off, \
+                "shared cache changed outputs (preservation violated)"
+            tag = f"{rate:g}" if rate > 0 else "sat"
+            for label, cell in (("off", off), ("on", on)):
+                hr = (f"{cell['shared_hit_rate']:>8.0%}"
+                      if "shared_hit_rate" in cell else f"{'-':>8}")
+                print(f"{tag if label == 'off' else '':>6} {label:>7} "
+                      f"{cell['p50_s']:>7.2f}s {cell['p99_s']:>7.2f}s "
+                      f"{cell['makespan_s']:>8.2f}s {cell['kb_queries']:>8} "
+                      f"{cell['merged_rows_saved']:>12} {hr}")
+            rows.append(dict(rate=rate, off=off, on=on,
+                             outputs_identical=True))
     return rows
 
 

@@ -200,3 +200,28 @@ class RaLMConfig:
     max_new_tokens: int = 128
     max_prompt_len: int = 512
     max_doc_len: int = 256
+    # ---- fault tolerance (fleet serving) -------------------------------------
+    # retry with exponential backoff + a per-call deadline around the merged
+    # verification KB call (FleetServer._verify_merged) and the continuous
+    # seed / ride-along path. KB search is a pure function of the query (the
+    # invariant dedup_verification already rests on), so a retried call
+    # returns byte-identical rows — transient-fault recovery is
+    # output-preserving by construction (tests/test_faults.py).
+    retry_max: int = 2                # retries after the first attempt
+    retry_backoff_s: float = 0.0      # base backoff; retry i sleeps base*2^(i-1)
+    # per-call deadline, 0 = none: a KB call that overruns it counts as timed
+    # out, its rows are discarded, and the call is retried (determinism makes
+    # the discard safe)
+    retrieval_timeout_s: float = 0.0
+    # a merged call that still fails after retries degrades the round to
+    # speculation-only for its slots — affected requests are marked
+    # status='degraded' and EXEMPT from byte-parity (the PR-7 exact-bit
+    # pattern); False re-raises RetrievalFailed out of serve() instead
+    degrade_on_failure: bool = True
+    # continuous-batching overload shedding: cap on ARRIVED requests allowed
+    # to wait for a slot (0 = unbounded; newest arrivals are turned away
+    # first, like a bounded admission queue), and a queueing-delay deadline
+    # past which a waiting request is retired with status='shed' rather than
+    # served long after its sender gave up (0 = none)
+    max_queue_depth: int = 0
+    queue_deadline_s: float = 0.0

@@ -42,6 +42,7 @@ simulated latency) next to the real threaded overlap.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -55,6 +56,7 @@ from repro.core.cache import (DenseRetrievalCache, SharedCacheView,
                               query_key)
 from repro.core.scheduler import OS3
 from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.faults import RetrievalFailed, RetrievalTimeout
 from repro.retrieval.retrievers import BM25Retriever
 
 
@@ -76,6 +78,16 @@ class ServeResult:
     # round they overlapped mis-speculated (carry_invalidations)
     carry_steps: int = 0
     carry_invalidations: int = 0
+    # fault-tolerance status: 'ok' | 'degraded' (a merged verification call
+    # failed after retries while this request was live — some of its rounds
+    # served speculation-only, so it is EXEMPT from the byte-parity claim,
+    # mirroring the quantized backends' exact-bit pattern) | 'shed' (retired
+    # by continuous-batching load shedding before serving a single token)
+    status: str = "ok"
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
     @property
     def speedup_denominator(self) -> float:
@@ -187,6 +199,12 @@ class _ServerBase:
         # whether per-request OS^3 instances optimize the async objective;
         # FleetServer overrides this when pipelined (async) rounds are on
         self._os3_async = rcfg.async_verification
+        # modeled cost of failed KB-call attempts (retries, backoff): the
+        # guarded call accumulates it here — possibly from the verification
+        # worker thread — and the round loop drains it into the analytic
+        # timeline after the join
+        self._ft_lock = threading.Lock()
+        self._ft_overhead = 0.0
 
     def _query_tokens(self, toks):
         """Context-dependent query summarizing an explicit context (paper §1) —
@@ -202,6 +220,60 @@ class _ServerBase:
         if self.sparse:
             return self.retriever.retrieve(queries, k)
         return self.retriever.retrieve(np.stack(queries), k)
+
+    def _retrieve_guarded(self, queries, k: int):
+        """The fault-tolerance shell around a KB call: per-call deadline +
+        exponential-backoff retry (``rcfg.retry_max`` / ``retry_backoff_s`` /
+        ``retrieval_timeout_s``). KB search is a pure function of the query,
+        so a retried call returns byte-identical rows and recovery from any
+        transient fault schedule is output-preserving by construction
+        (tests/test_faults.py). The deadline is enforced post hoc — a call
+        that overruns it completes, but its rows are discarded and the call
+        retried, which the same determinism makes safe.
+
+        Raises :class:`~repro.retrieval.faults.RetrievalFailed` once the
+        budget is exhausted; the fleet round loop degrades gracefully.
+        Failed attempts are charged to the analytic timeline at the modeled
+        batched-call cost (plus any real backoff sleeps) via the
+        ``_ft_overhead`` accumulator, and counted on ``RetrieverStats``."""
+        rcfg, stats = self.rcfg, self.retriever.stats
+        last = None
+        for attempt in range(rcfg.retry_max + 1):
+            final = attempt == rcfg.retry_max
+            if attempt:
+                backoff = rcfg.retry_backoff_s * (2 ** (attempt - 1))
+                if backoff:
+                    time.sleep(backoff)
+                with self._ft_lock:
+                    self._ft_overhead += backoff
+            t0 = time.perf_counter()
+            try:
+                ids, scores = self._retrieve_batch(queries, k)
+            except Exception as e:     # any backend fault is assumed transient
+                last = e
+                stats.record_failure("error", final=final)
+                with self._ft_lock:
+                    self._ft_overhead += stats.model_latency(len(queries))
+                continue
+            dt = time.perf_counter() - t0
+            if rcfg.retrieval_timeout_s and dt > rcfg.retrieval_timeout_s:
+                last = RetrievalTimeout(
+                    f"KB call took {dt:.3f}s > "
+                    f"{rcfg.retrieval_timeout_s:.3f}s deadline")
+                stats.record_failure("timeout", final=final)
+                with self._ft_lock:
+                    self._ft_overhead += stats.model_latency(len(queries))
+                continue
+            return ids, scores
+        raise RetrievalFailed(
+            f"KB call failed after {rcfg.retry_max + 1} attempts") from last
+
+    def _take_ft_overhead(self) -> float:
+        """Drain the modeled cost of failed attempts accumulated since the
+        last drain (thread-safe: the guarded call may run on the worker)."""
+        with self._ft_lock:
+            o, self._ft_overhead = self._ft_overhead, 0.0
+            return o
 
     def _doc(self, doc_id: int) -> tuple:
         return _chunk(self.retriever.kb.docs[int(doc_id)], self.chunk_len)

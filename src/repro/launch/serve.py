@@ -29,6 +29,19 @@ verification KB call runs on a worker thread while the fleet speculates the
 next lockstep stride, with per-slot carry/invalidation — the paper's +A,
 fleet-wide. A variant containing 'a' implies it.
 
+Fault tolerance (fleet paths): ``--retry-max`` / ``--retry-backoff`` /
+``--retrieval-timeout`` configure the retry-with-backoff + per-call-deadline
+shell around the merged verification KB call (retried calls return
+byte-identical rows — KB search is deterministic — so recovery preserves
+outputs); ``--inject-faults 'p_error=0.2,p_spike=0.1,spike_s=0.05,seed=3'``
+wraps the retriever's KB path in the seeded chaos harness
+(repro.retrieval.faults); ``--max-queue-depth`` / ``--queue-deadline`` bound
+the continuous scheduler's admission queue, shedding overflow/expired
+requests with a ``shed`` status instead of queueing unboundedly:
+
+    PYTHONPATH=src python -m repro.launch.serve --mode spec --concurrency 2 \
+        --requests 4 --inject-faults p_error=0.2,seed=3 --retry-max 3
+
 ``--retriever-backend {numpy,kernel,sharded,int8,int8-kernel,int8-sharded}``
 picks the dense retrievers' execution backend (`repro.retrieval.backends`):
 the flat numpy scan, the Pallas blocked top-k (`kernels/dense_topk`,
@@ -74,6 +87,7 @@ from repro.core.cache import SharedRetrievalCache
 from repro.core.ralmspec import RaLMSeq, RaLMSpec
 from repro.models.model import build_model
 from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.faults import inject_faults, parse_fault_spec
 from repro.retrieval.kb import DenseKB, SparseKB
 from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
                                         IVFRetriever)
@@ -140,10 +154,36 @@ def variant_config(variant: str, base: RaLMConfig) -> RaLMConfig:
 def make_arrivals(n: int, rate: float, trace: str = "", seed: int = 0):
     """Arrival times on the modeled clock: a trace beats a rate beats all-at-0.
 
-    ``trace`` is comma-separated seconds (cycled/truncated to n); ``rate`` > 0
-    draws Poisson arrivals (exponential inter-arrival gaps, rate req/s)."""
+    ``trace`` is comma-separated seconds, or ``@path`` naming a file with one
+    arrival time per line (blank lines and ``#`` comments ignored); either
+    form is cycled/truncated to n. ``rate`` > 0 draws Poisson arrivals
+    (exponential inter-arrival gaps, rate req/s). Malformed traces raise
+    ``ValueError`` with a one-line message — the CLI maps it to an argparse
+    error instead of a traceback."""
     if trace:
-        pts = [float(x) for x in trace.split(",") if x.strip()]
+        text = trace
+        if trace.startswith("@"):
+            path = trace[1:]
+            try:
+                with open(path) as fh:
+                    text = ",".join(line.split("#", 1)[0] for line in fh)
+            except OSError as e:
+                raise ValueError(
+                    f"cannot read arrival trace file {path!r}: {e}") from None
+        pts = []
+        for x in text.replace("\n", ",").split(","):
+            x = x.strip()
+            if not x:
+                continue
+            try:
+                pts.append(float(x))
+            except ValueError:
+                raise ValueError(f"malformed arrival time {x!r} "
+                                 "(want seconds as a float)") from None
+        if not pts:
+            raise ValueError("arrival trace is empty")
+        if any(p < 0 for p in pts):
+            raise ValueError("arrival times must be >= 0")
         return [pts[i % len(pts)] for i in range(n)]
     if rate > 0:
         gaps = np.random.default_rng(seed).exponential(1.0 / rate, size=n)
@@ -193,7 +233,8 @@ def main() -> None:
                     help="Poisson arrival rate, requests per modeled second "
                          "(0 = all requests arrive at t=0)")
     ap.add_argument("--arrival-trace", default="",
-                    help="comma-separated arrival times in modeled seconds "
+                    help="comma-separated arrival times in modeled seconds, "
+                         "or @FILE with one arrival per line "
                          "(overrides --arrival-rate)")
     ap.add_argument("--seed", type=int, default=0,
                     help="RNG seed for Poisson arrivals")
@@ -205,6 +246,31 @@ def main() -> None:
                          "to the baseline")
     ap.add_argument("--shared-cache-capacity", type=int, default=65536,
                     help="entries held by the shared cache tier (LRU)")
+    ap.add_argument("--retry-max", type=int, default=2,
+                    help="KB-call retries (after the first attempt) on the "
+                         "fleet verification/seed paths; a call failing every "
+                         "attempt degrades its round to speculation-only")
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    help="base exponential backoff in seconds between KB-call "
+                         "retries (retry i sleeps base*2^(i-1))")
+    ap.add_argument("--retrieval-timeout", type=float, default=0.0,
+                    help="per-KB-call deadline in seconds (0 = none): an "
+                         "overrunning call is discarded and retried — safe "
+                         "because KB search is deterministic")
+    ap.add_argument("--inject-faults", default="",
+                    help="chaos harness: seeded fault schedule for the KB "
+                         "path, e.g. 'p_error=0.2,p_spike=0.1,spike_s=0.05,"
+                         "seed=3' (also error_calls/spike_calls=i;j;..., "
+                         "max_faults=n; see repro.retrieval.faults). "
+                         "Requires --mode spec on a fleet scheduler")
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="continuous scheduler: arrived requests allowed to "
+                         "wait for a slot before newest arrivals are shed "
+                         "(0 = unbounded)")
+    ap.add_argument("--queue-deadline", type=float, default=0.0,
+                    help="continuous scheduler: queueing-delay deadline in "
+                         "modeled seconds past which a waiting request is "
+                         "shed (0 = none)")
     args = ap.parse_args()
     if args.retriever_backend not in BACKEND_SUPPORT[args.retriever]:
         # fail loudly rather than silently measuring the wrong scan; the one
@@ -212,6 +278,32 @@ def main() -> None:
         ap.error(f"--retriever {args.retriever} does not support "
                  f"--retriever-backend {args.retriever_backend} (supported: "
                  f"{', '.join(BACKEND_SUPPORT[args.retriever])})")
+    arrivals = None
+    if args.scheduler == "continuous":
+        # parse the arrival trace BEFORE building the stack: a malformed
+        # trace or unreadable @file is a usage error, not a traceback
+        try:
+            arrivals = make_arrivals(args.requests, args.arrival_rate,
+                                     args.arrival_trace, args.seed)
+        except ValueError as e:
+            ap.error(f"--arrival-trace: {e}")
+    fault_spec = None
+    if args.inject_faults:
+        try:
+            fault_spec = parse_fault_spec(args.inject_faults)
+        except ValueError as e:
+            ap.error(f"--inject-faults: {e}")
+        # fault tolerance lives on the fleet serving paths: the RaLMSeq
+        # baseline and the single-request RaLMSpec path have no retry /
+        # degradation shell, so injecting faults there would just crash —
+        # reject the combination loudly instead
+        if args.mode != "spec":
+            ap.error("--inject-faults requires --mode spec (the RaLMSeq "
+                     "baseline has no fault-tolerance shell)")
+        if args.scheduler != "continuous" and args.concurrency <= 1:
+            ap.error("--inject-faults requires a fleet scheduler: use "
+                     "--concurrency > 1 or --scheduler continuous (the "
+                     "single-request path has no fault-tolerance shell)")
 
     cfg, model, params, docs, enc, retr = build_stack(
         args.retriever, n_docs=args.n_docs, backend=args.retriever_backend,
@@ -226,9 +318,15 @@ def main() -> None:
             detail += (f"; INEXACT (recall contract), index "
                        f"{b.kb_bytes / 1e6:.1f} MB int8")
         print(f"{args.retriever.upper()} backend: {b.name} ({detail})")
+    inj = inject_faults(retr, fault_spec) if fault_spec is not None else None
     rcfg = variant_config(args.variant.replace("-", ""),
                           RaLMConfig(max_new_tokens=args.max_new,
-                                     speculation_stride=args.stride))
+                                     speculation_stride=args.stride,
+                                     retry_max=args.retry_max,
+                                     retry_backoff_s=args.retry_backoff,
+                                     retrieval_timeout_s=args.retrieval_timeout,
+                                     max_queue_depth=args.max_queue_depth,
+                                     queue_deadline_s=args.queue_deadline))
     prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
     eng = ServeEngine(model, params, cache_window=512)
     shared = (SharedRetrievalCache(capacity=args.shared_cache_capacity)
@@ -248,19 +346,35 @@ def main() -> None:
 
     async_rounds = True if args.async_fleet else None  # None: follow variant
 
+    def degradation_line(res) -> None:
+        """One line of fault-tolerance accounting when anything fired."""
+        if not (res.kb_errors or res.kb_timeouts or res.kb_failures
+                or res.degraded_rounds or res.worker_crashes
+                or res.seed_failures or getattr(res, "shed", 0)):
+            return
+        print(f"{'fault ledger':14s} retried {res.kb_errors} errors + "
+              f"{res.kb_timeouts} timeouts; {res.kb_failures} calls failed "
+              f"for good -> {res.degraded_rounds} degraded rounds "
+              f"({res.degraded_requests} requests), {res.worker_crashes} "
+              f"worker crashes recovered, {res.seed_failures} seed calls "
+              f"lost, {getattr(res, 'shed', 0)} requests shed")
+
     def run_fleet(label):
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
-        fleet = FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds,
-                            shared_cache=shared)
         tot_w = tot_an = 0.0
         toks, n_tok = [], 0
-        for i in range(0, len(prompts), args.concurrency):
-            fr = fleet.serve(prompts[i:i + args.concurrency])
-            tot_w += fr.wall_time
-            tot_an += fr.analytic_time
-            n_tok += fr.total_tokens
-            toks.extend(r.tokens for r in fr.results)
+        # context manager: the async verification worker is released even if
+        # a serve() raises mid-group
+        with FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds,
+                         shared_cache=shared) as fleet:
+            for i in range(0, len(prompts), args.concurrency):
+                fr = fleet.serve(prompts[i:i + args.concurrency])
+                tot_w += fr.wall_time
+                tot_an += fr.analytic_time
+                n_tok += fr.total_tokens
+                toks.extend(r.tokens for r in fr.results)
+                degradation_line(fr)
         print(f"{label:14s} wall {tot_w:7.2f}s  modeled {tot_an:6.2f}s  "
               f"throughput {n_tok / max(tot_an, 1e-9):8.1f} tok/s (modeled)")
         return tot_w, toks
@@ -268,17 +382,16 @@ def main() -> None:
     def run_continuous(label):
         beng = BatchedServeEngine(model, params, args.concurrency,
                                   cache_window=512)
-        server = ContinuousFleetServer(beng, retr, rcfg, enc,
-                                       async_rounds=async_rounds,
-                                       shared_cache=shared)
-        arrivals = make_arrivals(len(prompts), args.arrival_rate,
-                                 args.arrival_trace, args.seed)
-        cr = server.serve(as_requests(prompts, arrivals))
+        with ContinuousFleetServer(beng, retr, rcfg, enc,
+                                   async_rounds=async_rounds,
+                                   shared_cache=shared) as server:
+            cr = server.serve(as_requests(prompts, arrivals))
         print(f"{label:14s} wall {cr.wall_time:7.2f}s  "
               f"modeled makespan {cr.analytic_time:6.2f}s  "
               f"throughput {cr.throughput():8.1f} tok/s (modeled)  "
               f"p50 {cr.p50:.2f}s  p99 {cr.p99:.2f}s  "
               f"peak live {cr.max_live}")
+        degradation_line(cr)
         return cr.wall_time, [r.tokens for r in cr.results]
 
     results = {}
@@ -308,6 +421,11 @@ def main() -> None:
         print(f"shared cache: {st['hits_exact']} exact + "
               f"{st['hits_approx']} approx hits / {st['lookups']} lookups "
               f"({st['hit_rate']:.0%} hit rate), {st['size']} entries")
+    if inj is not None:
+        print(f"fault injection: {inj.errors} errors + {inj.spikes} spikes "
+              f"over {inj.calls} KB scans (seed {inj.spec.seed}); "
+              f"retried {retr.stats.errors + retr.stats.timeouts} attempts, "
+              f"{retr.stats.failed_calls} calls failed after retries")
 
 
 if __name__ == "__main__":

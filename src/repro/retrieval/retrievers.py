@@ -78,6 +78,14 @@ class RetrieverStats:
         self.time = 0.0
         self.modeled_time = 0.0
         self.warmup_calls = 0
+        # fault-tolerance ledger, recorded by the serving layer's retry shell
+        # (_ServerBase._retrieve_guarded): attempts that raised, attempts that
+        # overran the per-call deadline, and calls that exhausted the whole
+        # retry budget. Successful attempts land in calls/queries as usual;
+        # raised attempts never reach add(), so calls counts completed scans.
+        self.errors = 0
+        self.timeouts = 0
+        self.failed_calls = 0
         self._unit: Optional[float] = None
         self._lock = threading.RLock()
 
@@ -107,6 +115,18 @@ class RetrieverStats:
     def model_latency(self, B: int) -> float:
         with self._lock:
             return (self._unit or 0.0) * self.factor(B)
+
+    def record_failure(self, kind: str, final: bool = False) -> None:
+        """One failed KB-call attempt: ``kind`` is 'timeout' (overran the
+        per-call deadline) or 'error' (raised); ``final`` marks the attempt
+        that exhausted the retry budget."""
+        with self._lock:
+            if kind == "timeout":
+                self.timeouts += 1
+            else:
+                self.errors += 1
+            if final:
+                self.failed_calls += 1
 
 
 class _TimedRetriever:

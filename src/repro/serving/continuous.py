@@ -86,6 +86,20 @@ class ContinuousResult:
     # in-round verification dedup ledger (same semantics as FleetResult)
     merged_rows: int = 0
     merged_rows_saved: int = 0
+    # fault-tolerance ledger (same semantics as FleetResult), plus the
+    # overload-shedding count: requests retired with status='shed' by the
+    # bounded admission queue / queueing deadline before winning a slot
+    kb_errors: int = 0
+    kb_timeouts: int = 0
+    kb_failures: int = 0
+    seed_failures: int = 0
+    degraded_rounds: int = 0
+    worker_crashes: int = 0
+    shed: int = 0
+
+    @property
+    def degraded_requests(self) -> int:
+        return sum(1 for r in self.results if r.status == "degraded")
 
     @property
     def total_tokens(self) -> int:
@@ -149,6 +163,8 @@ class ContinuousFleetServer(FleetServer):
         r0t = r.stats.time
         r0c, r0q = r.stats.calls, r.stats.queries
         m0, ms0 = self.merged_rows, self.merged_rows_saved
+        r0e, r0o, r0f = r.stats.errors, r.stats.timeouts, r.stats.failed_calls
+        sf0 = self.seed_failures
         out = ContinuousResult()
         states = {}                         # slot -> RequestState (live only)
         done = {}                           # rid  -> RequestState (retired)
@@ -161,6 +177,9 @@ class ContinuousFleetServer(FleetServer):
         while queue or states:
             if not states and queue:        # pool drained: jump to next arrival
                 clock = max(clock, queue[0].arrival)
+
+            # ---- load shedding: graceful degradation under overload --------
+            self._shed_overloaded(queue, done, out, clock, t0)
 
             # ---- admit: arrived requests into free slots, mid-flight -------
             # the slot population must never mutate under an in-flight
@@ -220,15 +239,56 @@ class ContinuousFleetServer(FleetServer):
         out.kb_queries = r.stats.queries - r0q
         out.merged_rows = self.merged_rows - m0
         out.merged_rows_saved = self.merged_rows_saved - ms0
+        out.kb_errors = r.stats.errors - r0e
+        out.kb_timeouts = r.stats.timeouts - r0o
+        out.kb_failures = r.stats.failed_calls - r0f
+        out.seed_failures = self.seed_failures - sf0
         # report in request order; gen/retrieval time are fleet-shared (the
-        # batched engine pays them once), same convention as FleetServer
+        # batched engine pays them once), same convention as FleetServer.
+        # Shed requests keep their result row (status='shed', no tokens) but
+        # stay OUT of the latency distribution — p50/p99 describe service the
+        # fleet actually delivered, shedding is its own counter.
         for rq in sorted(reqs, key=lambda x: x.rid):
             st = done[rq.rid]
             st.res.gen_time = eng.stats.gen_time
             st.res.retrieval_time = r.stats.time - r0t
             out.results.append(st.res)
-            out.latencies.append(st.finished - st.arrival)
+            if st.res.status != "shed":
+                out.latencies.append(st.finished - st.arrival)
         return out
+
+    def _shed_overloaded(self, queue, done, out, clock: float,
+                         t0: float) -> None:
+        """Bounded admission + deadline-driven load shedding (ROADMAP item 4):
+        retire waiting requests the fleet cannot serve in time with a ``shed``
+        status instead of queueing unboundedly. ``rcfg.queue_deadline_s``
+        sheds any ARRIVED request whose queueing delay already exceeds the
+        deadline; ``rcfg.max_queue_depth`` then bounds how many arrived
+        requests may keep waiting — newest arrivals are turned away first,
+        the bounded-queue admission policy. Requests not yet arrived on the
+        modeled clock are never considered (they haven't been offered)."""
+        rcfg = self.rcfg
+        if not (rcfg.max_queue_depth or rcfg.queue_deadline_s):
+            return
+        arrived = [rq for rq in queue if rq.arrival <= clock]
+        drop = [rq for rq in arrived
+                if rcfg.queue_deadline_s
+                and clock - rq.arrival > rcfg.queue_deadline_s]
+        if rcfg.max_queue_depth:
+            waiting = [rq for rq in arrived if rq not in drop]
+            # the head of the line is about to be admitted into free slots —
+            # the depth bound applies to requests that actually keep waiting
+            waiting = waiting[len(self.engine.free_slots()):]
+            drop += waiting[rcfg.max_queue_depth:]
+        for rq in drop:
+            queue.remove(rq)
+            st = self._new_request_state(rid=rq.rid, max_new=rq.max_new)
+            st.arrival, st.finished = rq.arrival, clock
+            st.res.status = "shed"
+            st.res.analytic_time = clock - rq.arrival
+            st.res.wall_time = time.perf_counter() - t0
+            done[rq.rid] = st
+            out.shed += 1
 
     # ---- seed-query ride-along (see class docstring) ------------------------
     def _extra_verification_queries(self, spec_elapsed: float):

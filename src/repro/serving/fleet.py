@@ -66,6 +66,7 @@ from repro.configs.base import RaLMConfig
 from repro.core.cache import SharedRetrievalCache
 from repro.core.ralmspec import (RequestState, ServeResult, _ServerBase,
                                  dedup_queries, first_mismatch)
+from repro.retrieval.faults import RetrievalFailed
 
 
 @dataclass
@@ -82,6 +83,27 @@ class FleetResult:
     # all merged calls vs rows the byte-identical-query collapse saved
     merged_rows: int = 0
     merged_rows_saved: int = 0
+    # fault-tolerance ledger (tests/test_faults.py). Attempt counters are
+    # fleet-shared like kb_calls: KB-call attempts that raised and were
+    # retried (kb_errors), attempts that overran the per-call deadline
+    # (kb_timeouts), and calls that exhausted the whole retry budget
+    # (kb_failures). degraded_rounds counts rounds that fell back to
+    # speculation-only after such a failure; worker_crashes counts async
+    # verification calls that raised on the worker and were re-run
+    # synchronously; seed_failures counts failed admission-seed calls (those
+    # only cost a cold speculation cache — never correctness).
+    kb_errors: int = 0
+    kb_timeouts: int = 0
+    kb_failures: int = 0
+    seed_failures: int = 0
+    degraded_rounds: int = 0
+    worker_crashes: int = 0
+
+    @property
+    def degraded_requests(self) -> int:
+        """Requests whose outputs are exempt from byte-parity because a
+        verification call failed for good while they were live."""
+        return sum(1 for r in self.results if r.status == "degraded")
 
     @property
     def total_tokens(self) -> int:
@@ -124,6 +146,8 @@ class FleetServer(_ServerBase):
         # monotonic dedup ledger; serve() diffs it into the result object
         self.merged_rows = 0
         self.merged_rows_saved = 0
+        # monotonic count of failed admission-seed calls (same diff pattern)
+        self.seed_failures = 0
 
     # ---- per-slot predicates (fleet versions of _ServerBase._done/_budget) ---------
     # The inherited single-request forms read engine.finished/.generated, which on
@@ -156,12 +180,19 @@ class FleetServer(_ServerBase):
 
     def _drain_inflight(self) -> None:
         """Join any in-flight verification call. ``_run_round`` always joins
-        its own call before returning, so between rounds this is a no-op —
-        but slot-population mutations (admit/retire) go through it anyway so
-        the invariant survives future reshaping of the pipeline."""
+        (and handles the failure of) its own call before returning, so
+        between rounds this is a no-op — but slot-population mutations
+        (admit/retire) go through it anyway so the invariant survives future
+        reshaping of the pipeline. A leftover handle only exists on
+        exceptional paths, so a raise from it is swallowed here: the drain's
+        job is to make the join happen, and re-raising would poison
+        ``close()`` with a failure the round loop already recovered from."""
         if self._inflight is not None:
             fut, self._inflight = self._inflight, None
-            fut.result()
+            try:
+                fut.result()
+            except Exception:
+                pass
 
     def close(self) -> None:
         """Release the verification worker thread. Long-lived processes that
@@ -195,11 +226,13 @@ class FleetServer(_ServerBase):
         return uniq, inv
 
     def _verify_merged(self, queries, k: int):
-        """The round's merged verification KB call + shared-tier publish.
+        """The round's merged verification KB call + shared-tier publish,
+        behind the fault-tolerance shell (deadline + backoff retry — raises
+        RetrievalFailed when the budget runs out; the round loop degrades).
         With async rounds this body runs on the worker thread — the publish
         is what lets slot t+1's overlapped speculation hit results verified
         for slot t, and it is safe because the shared tier locks."""
-        ids, scores = self._retrieve_batch(queries, k)
+        ids, scores = self._retrieve_guarded(queries, k)
         self._shared_put(queries, ids, scores)
         return ids, scores
 
@@ -207,12 +240,23 @@ class FleetServer(_ServerBase):
         """Algorithm 1 line 4, cross-request batched: ONE KB call seeds every
         given (slot, state) pair's cache — deduplicated, so N identical
         prompts cost one KB row. Returns the modeled latency of the call
-        (what the batched retrieval would cost on paper hardware)."""
+        (what the batched retrieval would cost on paper hardware).
+
+        A seed call that fails after retries is absorbed, not raised: seeding
+        only warms speculation (a cold cache speculates -1 and verification
+        corrects), so the slots start cold and stay byte-identical — the
+        cheapest degradation in the stack (``seed_failures`` on the result)."""
         if not pairs:
             return 0.0
         q0 = [self._query_tokens(self.engine.tokens[b]) for b, _ in pairs]
         uniq, inv = self._dedup(q0)
-        ids_u, _ = self._verify_merged(uniq, max(self.rcfg.prefetch_top_k, 1))
+        try:
+            ids_u, _ = self._verify_merged(uniq,
+                                           max(self.rcfg.prefetch_top_k, 1))
+        except RetrievalFailed:
+            self.seed_failures += 1
+            return (self.retriever.stats.model_latency(len(uniq))
+                    + self._take_ft_overhead())
         ids0 = ids_u if inv is None else ids_u[inv]
         for (b, st), row in zip(pairs, ids0):
             self._cache_insert(st.cache, row)
@@ -222,7 +266,8 @@ class FleetServer(_ServerBase):
             # shared calls, so the per-slot sum exceeds it by design.
             st.res.kb_calls += 1
             st.res.kb_queries += 1
-        return self.retriever.stats.model_latency(len(uniq))
+        return (self.retriever.stats.model_latency(len(uniq))
+                + self._take_ft_overhead())
 
     def _lockstep_substep(self, doers: Sequence[int], states) -> tuple:
         """One batched speculation sub-step over ``doers``: per-slot snapshot
@@ -374,14 +419,56 @@ class FleetServer(_ServerBase):
                     # raised, a still-set handle would poison _drain_inflight
                     # and close() with the same re-raise
                     fut, self._inflight = self._inflight, None
+                try:
                     gt_u, _ = fut.result()
-        if gt_u is None:                        # sync round (or gate closed)
-            gt_u, _ = self._verify_merged(uniq, k)
+                except Exception:
+                    # worker crash recovery: the in-flight verification died
+                    # (RetrievalFailed after its retries, or anything else the
+                    # worker hit). Discard the overlapped stride exactly as a
+                    # rollback would — restoring each slot's first overlap
+                    # snapshot rewinds the tentative steps — then fall back to
+                    # a synchronous verification round below, which gets a
+                    # fresh retry budget. The round, not the server, dies
+                    # last: only a failed *synchronous* call degrades.
+                    fleet.worker_crashes += 1
+                    for b, steps in overlap.items():
+                        eng.restore(b, steps[0][0])
+                        states[b].res.carry_invalidations += 1
+                    overlap, overlap_a = {}, 0.0
+        if gt_u is None:                        # sync round / closed gate / fallback
+            try:
+                gt_u, _ = self._verify_merged(uniq, k)
+            except RetrievalFailed:
+                if not rcfg.degrade_on_failure:
+                    raise
+                # ---- graceful degradation: speculation-only round -----------
+                # The KB is unreachable for good (this round): accept every
+                # slot's speculated stride as served output — no rollback, no
+                # cache update — and mark the requests degraded, which exempts
+                # them from the byte-parity claim (shared-cache/speculation
+                # quality only; the stream stays available instead of dying).
+                # Ride-along seed queries are dropped (their requests take the
+                # dedicated seed path later); OS^3 sees no verification.
+                analytic += self._take_ft_overhead()
+                fleet.rounds += 1
+                fleet.degraded_rounds += 1
+                self._absorb_extra_verification([])
+                for b in participants:
+                    st = states[b]
+                    n = len(st.specs)
+                    st.res.status = "degraded"
+                    st.res.rounds += 1
+                    st.res.spec_steps += n
+                    st.res.strides.append(n)
+                return analytic, len(participants)
         gt_all = gt_u if inv is None else gt_u[inv]
         b_model = r.stats.model_latency(len(uniq))
         # analytic ideal (paper §4, fleet-wide): an overlapped round pays
         # max(a_overlap, b) for the in-flight window; a plain round pays b.
+        # Failed attempts (retries/backoff, a crashed worker call) are charged
+        # on top at their modeled cost via the guarded call's accumulator.
         analytic += max(overlap_a, b_model) if overlap_a else b_model
+        analytic += self._take_ft_overhead()
         fleet.rounds += 1
         if extra:
             self._absorb_extra_verification(gt_all[-len(extra):])
@@ -445,6 +532,8 @@ class FleetServer(_ServerBase):
         r0t = r.stats.time
         r0c, r0q = r.stats.calls, r.stats.queries
         m0, ms0 = self.merged_rows, self.merged_rows_saved
+        r0e, r0o, r0f = r.stats.errors, r.stats.timeouts, r.stats.failed_calls
+        sf0 = self.seed_failures
         states = [self._new_request_state(
             rid=b, max_new=max_new[b] if max_new is not None else None)
             for b in range(B)]
@@ -476,6 +565,10 @@ class FleetServer(_ServerBase):
         fleet.kb_queries = r.stats.queries - r0q
         fleet.merged_rows = self.merged_rows - m0
         fleet.merged_rows_saved = self.merged_rows_saved - ms0
+        fleet.kb_errors = r.stats.errors - r0e
+        fleet.kb_timeouts = r.stats.timeouts - r0o
+        fleet.kb_failures = r.stats.failed_calls - r0f
+        fleet.seed_failures = self.seed_failures - sf0
         # per-slot time fields are the SHARED fleet timeline (lockstep rounds
         # finish together): don't sum them across slots — like kb_calls above,
         # summing overcounts by the concurrency factor. Aggregate via

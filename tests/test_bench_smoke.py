@@ -55,6 +55,10 @@ BENCHES = {
               "--retriever", "both"], kind="backends"),
     "bench_shared_cache.py": dict(
         args=["--tiny", "--retriever", "edr"], kind="shared_cache"),
+    "bench_faults.py": dict(
+        args=["--retriever", "edr", "--rates", "0,0.3", "--slots", "2",
+              "--requests", "3", "--max-new", "8", "--n-docs", "800"],
+        kind="faults"),
 }
 
 
@@ -159,9 +163,33 @@ def _check_shared_cache(payload):
                                     "shared_hits_approx"}, r["on"]
 
 
+def _check_faults(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    for rows in results.values():
+        assert rows
+        rates = [r["rate"] for r in rows]
+        assert 0 in rates, "the sweep needs a fault-free reference rate"
+        for r in rows:
+            assert set(r) >= {"rate", "p50_s", "p99_s", "makespan_s",
+                              "tokps_modeled", "goodput_modeled", "tokens_ok",
+                              "degraded", "shed", "retried_errors",
+                              "retried_timeouts", "failed_calls", "injected",
+                              "outputs_match"}, r
+            for key in ("p50_s", "p99_s", "makespan_s", "tokps_modeled",
+                        "goodput_modeled"):
+                assert _finite(r[key]) and r[key] >= 0, (key, r)
+            # the preservation claim under chaos: every NON-degraded request
+            # served byte-identical tokens to the fault-free reference run
+            assert r["outputs_match"] is True, r
+            assert r["goodput_modeled"] <= r["tokps_modeled"] + 1e-9, r
+            if r["rate"] == 0:
+                assert r["injected"] == 0 and r["degraded"] == 0, r
+
+
 CHECKS = dict(csv=_check_csv, fleet=_check_fleet, continuous=_check_continuous,
               async_fleet=_check_async_fleet, backends=_check_backends,
-              shared_cache=_check_shared_cache)
+              shared_cache=_check_shared_cache, faults=_check_faults)
 
 
 def test_committed_bench_json_files_are_schema_valid():

@@ -1,0 +1,390 @@
+"""Chaos suite for the fault-tolerance shell (repro.retrieval.faults +
+_ServerBase._retrieve_guarded + the fleet degradation paths):
+
+  (a) the injector itself: a seeded schedule is a pure function of
+      (seed, call index) — two runs inject identical faults — and the
+      --inject-faults DSL parses/round-trips with one-line errors,
+  (b) PRESERVATION under transient faults: fleet / continuous / async
+      rounds x EDR / ADR / SR stay byte-identical to per-request RaLMSeq
+      while a seeded schedule of injected errors is retried away (KB search
+      is deterministic, so a retried call returns byte-identical rows),
+  (c) the per-call deadline: latency spikes past ``retrieval_timeout_s``
+      are discarded and retried, counted as timeouts, outputs untouched,
+  (d) worker-crash recovery: an async verification call that dies on the
+      worker thread falls back to a synchronous round (overlap invalidated
+      exactly as on rollback) instead of hanging or poisoning close(),
+  (e) graceful degradation: a merged call that fails for good degrades the
+      round to speculation-only (requests marked 'degraded', exempt from
+      byte-parity) — or re-raises when ``degrade_on_failure`` is off,
+  (f) overload shedding: the bounded admission queue / queueing deadline
+      retire requests with status='shed' while admitted requests still
+      serve byte-identical tokens,
+  (g) hygiene: no thread leak after an exception mid-serve (the context
+      manager releases the verification worker), and the serve CLI maps
+      malformed traces / misplaced fault flags to one-line argparse errors.
+
+Engines are module-scoped (serve() resets them) so jit caches are shared.
+"""
+import dataclasses
+import sys
+import threading
+
+import jax
+import pytest
+
+from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.ralmspec import RaLMSeq
+from repro.models.model import build_model
+from repro.retrieval.encoder import ContextEncoder
+from repro.retrieval.faults import (FaultInjector, FaultSpec, FaultyBackend,
+                                    RetrievalFailed, TransientRetrievalError,
+                                    inject_faults, parse_fault_spec)
+from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
+                                        IVFRetriever)
+from repro.serving.batched import BatchedServeEngine
+from repro.serving.continuous import ContinuousFleetServer, as_requests
+from repro.serving.engine import ServeEngine
+from repro.serving.fleet import FleetServer
+from repro.training.data import make_queries, synthetic_corpus
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = reduced(get_config("ralm-gpt2-medium"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    docs = synthetic_corpus(1500, cfg.vocab_size)
+    enc = ContextEncoder(cfg.vocab_size, d=32)
+    dkb = DenseKB.build(docs, enc)
+    skb = SparseKB.build(docs)
+    prompts = [(q * 10)[:32] for q in make_queries(docs, 3)]
+    seng = ServeEngine(model, params, cache_window=256)
+    beng = BatchedServeEngine(model, params, 3, cache_window=256)
+    beng2 = BatchedServeEngine(model, params, 2, cache_window=256)
+    return model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2
+
+
+RCFG = RaLMConfig(max_new_tokens=20, speculation_stride=3,
+                  async_gate_ratio=0.0, async_min_overlap=16)
+BUDGETS = [20, 8, 14]
+
+# the canonical transient outage: at most 6 injected faults total
+# (max_faults), so with retry_max=6 (7 attempts per call) EVERY call is
+# guaranteed to eventually succeed — the schedule is provably recoverable,
+# whatever calls the seeded draw lands its faults on
+CHAOS = FaultSpec(seed=7, p_error=0.4, p_spike=0.3, spike_s=0.002,
+                  max_faults=6)
+CHAOS_RCFG = dataclasses.replace(RCFG, retry_max=6)
+
+
+def _retriever(name, dkb, skb):
+    return {"edr": lambda: ExactDenseRetriever(dkb),
+            "adr": lambda: IVFRetriever(dkb, n_clusters=16, nprobe=2),
+            "sr": lambda: BM25Retriever(skb)}[name]()
+
+
+def _seq_tokens(seng, retr, enc, rcfg, prompt, budget=None):
+    one = rcfg if budget is None else dataclasses.replace(
+        rcfg, max_new_tokens=budget)
+    return RaLMSeq(seng, retr, one, enc).serve(prompt).tokens
+
+
+# ---------------------------------------------------------------------------------
+# (a) the injector: seeded determinism + DSL parsing
+# ---------------------------------------------------------------------------------
+def _schedule(spec, n):
+    inj = FaultInjector(spec)
+    for _ in range(n):
+        try:
+            inj.fire()
+        except TransientRetrievalError:
+            pass
+    return inj
+
+
+def test_same_seed_same_schedule():
+    spec = FaultSpec(seed=3, p_error=0.3, p_spike=0.3, spike_s=0.0)
+    a, b = _schedule(spec, 80), _schedule(spec, 80)
+    assert a.log == b.log, "same seed must inject the identical schedule"
+    kinds = {k for _, k in a.log}
+    assert kinds == {"ok", "error", "spike"}, \
+        "80 draws at p=0.3 should exercise every decision kind"
+    assert (a.calls, a.errors, a.spikes) == (b.calls, b.errors, b.spikes)
+
+
+def test_schedule_independent_of_rates():
+    """The uniforms are drawn unconditionally, so a call that errors under
+    (p_error=0.3) errors at the same index under (p_error=0.3, p_spike=0.9)
+    — the error draw is not perturbed by the spike rate."""
+    lo = _schedule(FaultSpec(seed=11, p_error=0.3), 60)
+    hi = _schedule(FaultSpec(seed=11, p_error=0.3, p_spike=1.0), 60)
+    err_lo = {i for i, k in lo.log if k == "error"}
+    err_hi = {i for i, k in hi.log if k == "error"}
+    assert err_lo == err_hi
+
+
+def test_explicit_call_indices_and_cap():
+    inj = _schedule(FaultSpec(error_calls=(2, 5), spike_calls=(3,)), 8)
+    assert inj.log == [(0, "ok"), (1, "ok"), (2, "error"), (3, "spike"),
+                       (4, "ok"), (5, "error"), (6, "ok"), (7, "ok")]
+    capped = _schedule(FaultSpec(p_error=1.0, max_faults=3), 10)
+    assert capped.errors == 3
+    assert [k for _, k in capped.log] == ["error"] * 3 + ["ok"] * 7
+
+
+def test_parse_fault_spec_roundtrip():
+    spec = parse_fault_spec(
+        "p_error=0.2, p_spike=0.1, spike_s=0.05, seed=9, "
+        "error_calls=1;4;7, spike_calls=2, max_faults=5")
+    assert spec == FaultSpec(seed=9, p_error=0.2, p_spike=0.1, spike_s=0.05,
+                             error_calls=(1, 4, 7), spike_calls=(2,),
+                             max_faults=5)
+    assert parse_fault_spec("") == FaultSpec()
+
+
+@pytest.mark.parametrize("bad", [
+    "p_error",                  # no '='
+    "nope=1",                   # unknown key
+    "p_error=lots",             # unparsable value
+    "p_error=1.5",              # probability out of range
+    "spike_s=-1",               # negative spike
+    "error_calls=1;x",          # unparsable call index
+])
+def test_parse_fault_spec_rejects(bad):
+    with pytest.raises(ValueError) as ei:
+        parse_fault_spec(bad)
+    assert "\n" not in str(ei.value), "CLI wants a one-line message"
+
+
+def test_faulty_backend_delegates(stack):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    inner = retr.backend
+    wrapped = FaultyBackend(inner, FaultSpec())  # no faults: pure passthrough
+    assert wrapped.name == inner.name and wrapped.exact == inner.exact
+    q = [enc.encode(prompts[0])]
+    import numpy as np
+    a = inner.search(np.asarray(q), 3)
+    b = wrapped.search(np.asarray(q), 3)
+    assert (a[0] == b[0]).all() and wrapped.injector.calls == 1
+
+
+# ---------------------------------------------------------------------------------
+# (b) preservation under transient faults, every scheduler x every retriever
+# ---------------------------------------------------------------------------------
+@pytest.mark.parametrize("retr_name", ["edr", "adr", "sr"])
+@pytest.mark.parametrize("mode", ["fleet", "continuous", "async"])
+def test_preservation_under_transient_faults(stack, mode, retr_name):
+    """A seeded, provably-transient fault schedule (see CHAOS) on the merged
+    verification call: retries return byte-identical rows, so every request
+    must match per-request RaLMSeq on a CLEAN retriever — and the faults must
+    actually have fired."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    clean = _retriever(retr_name, dkb, skb)
+    faulty = _retriever(retr_name, dkb, skb)
+    inj = inject_faults(faulty, CHAOS)
+
+    if mode == "continuous":
+        seq = [_seq_tokens(seng, clean, enc, CHAOS_RCFG, p, mn)
+               for p, mn in zip(prompts, BUDGETS)]
+        with ContinuousFleetServer(beng2, faulty, CHAOS_RCFG, enc,
+                                   async_rounds=False) as server:
+            res = server.serve(as_requests(prompts, arrivals=[0, 0, 1e-4],
+                                           max_new=BUDGETS))
+    else:
+        seq = [_seq_tokens(seng, clean, enc, CHAOS_RCFG, p) for p in prompts]
+        with FleetServer(beng, faulty, CHAOS_RCFG, enc,
+                         async_rounds=(mode == "async")) as server:
+            res = server.serve(prompts)
+
+    assert inj.injected > 0, "the chaos schedule never fired"
+    assert res.kb_failures == 0, "max_faults < attempts: no call may fail"
+    assert res.kb_errors > 0, "injected errors should surface as retries"
+    for i, r in enumerate(res.results):
+        assert r.status == "ok"
+        assert r.tokens == seq[i], \
+            f"{mode}/{retr_name}: request {i} diverged under injected faults"
+    if mode == "async":
+        assert sum(r.carry_steps + r.carry_invalidations
+                   for r in res.results) > 0, "pipeline never overlapped"
+
+
+# ---------------------------------------------------------------------------------
+# (c) latency spikes vs the per-call deadline
+# ---------------------------------------------------------------------------------
+def test_timeout_discards_and_retries(stack):
+    """Spikes on the first two KB scans push them past the deadline: both are
+    discarded (counted as timeouts) and the retry — deterministic KB — keeps
+    outputs byte-identical."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    clean = ExactDenseRetriever(dkb)
+    faulty = ExactDenseRetriever(dkb)
+    inject_faults(faulty, FaultSpec(spike_calls=(0, 1), spike_s=0.3))
+    rcfg = dataclasses.replace(RCFG, retrieval_timeout_s=0.1, retry_max=3)
+    seq = [_seq_tokens(seng, clean, enc, rcfg, p) for p in prompts]
+    with FleetServer(beng, faulty, rcfg, enc, async_rounds=False) as fleet:
+        fr = fleet.serve(prompts)
+    assert fr.kb_timeouts == 2, "both spiked attempts should time out"
+    assert fr.kb_failures == 0 and fr.kb_errors == 0
+    for i, r in enumerate(fr.results):
+        assert r.status == "ok" and r.tokens == seq[i]
+
+
+# ---------------------------------------------------------------------------------
+# (d) worker-crash recovery on the async pipeline
+# ---------------------------------------------------------------------------------
+def test_worker_crash_recovers_synchronously(stack):
+    """retry_max=0 and an error forced on KB call 1 (the first merged
+    verification call; call 0 is the seed): the call dies ON THE WORKER
+    THREAD. The round must invalidate its overlapped stride, re-run the call
+    synchronously (fresh budget, next injector index is clean), and keep
+    every output byte-identical — and close() must not hang on the carcass."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    clean = ExactDenseRetriever(dkb)
+    faulty = ExactDenseRetriever(dkb)
+    inject_faults(faulty, FaultSpec(error_calls=(1,)))
+    rcfg = dataclasses.replace(RCFG, retry_max=0)
+    seq = [_seq_tokens(seng, clean, enc, rcfg, p) for p in prompts]
+    with FleetServer(beng, faulty, rcfg, enc, async_rounds=True) as fleet:
+        fr = fleet.serve(prompts)
+    assert fr.worker_crashes == 1, "the in-flight call should have died"
+    assert fr.kb_failures == 1, "retry_max=0: the worker call failed for good"
+    assert fr.degraded_rounds == 0, "the sync fallback must have saved it"
+    for i, r in enumerate(fr.results):
+        assert r.status == "ok" and r.tokens == seq[i]
+
+
+# ---------------------------------------------------------------------------------
+# (e) graceful degradation when the KB is unreachable for good
+# ---------------------------------------------------------------------------------
+def test_degraded_rounds_keep_serving(stack):
+    """p_error=1.0: every attempt of every call fails. The fleet must keep
+    the streams alive — speculation-only rounds, requests marked 'degraded'
+    (byte-parity exemption), seed failure absorbed — instead of dying."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    faulty = ExactDenseRetriever(dkb)
+    inject_faults(faulty, FaultSpec(p_error=1.0))
+    rcfg = dataclasses.replace(RCFG, retry_max=1)
+    with FleetServer(beng, faulty, rcfg, enc, async_rounds=False) as fleet:
+        fr = fleet.serve(prompts)
+    assert fr.seed_failures == 1, "the seed call fails but is absorbed"
+    assert fr.degraded_rounds > 0 and fr.kb_failures > 0
+    assert fr.degraded_requests == len(prompts)
+    for r in fr.results:
+        assert r.status == "degraded" and not r.ok
+        assert r.tokens, "a degraded stream must still serve tokens"
+
+
+def test_degrade_off_reraises(stack):
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    faulty = ExactDenseRetriever(dkb)
+    inject_faults(faulty, FaultSpec(p_error=1.0))
+    rcfg = dataclasses.replace(RCFG, retry_max=1, degrade_on_failure=False)
+    with FleetServer(beng, faulty, rcfg, enc, async_rounds=False) as fleet:
+        with pytest.raises(RetrievalFailed):
+            fleet.serve(prompts)
+
+
+# ---------------------------------------------------------------------------------
+# (f) overload shedding on the continuous scheduler
+# ---------------------------------------------------------------------------------
+def test_shed_under_overload(stack):
+    """6 simultaneous arrivals on 2 slots with a depth-1 queue and a 0.5s
+    queueing deadline: the fleet admits what it can serve, sheds the rest
+    (status='shed', no tokens, OUT of the latency distribution), and the
+    admitted requests still serve byte-identical tokens."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    rcfg = dataclasses.replace(RCFG, max_queue_depth=1, queue_deadline_s=0.5)
+    six = [prompts[i % len(prompts)] for i in range(6)]
+    seq = {tuple(p): _seq_tokens(seng, retr, enc, rcfg, p) for p in prompts}
+    with ContinuousFleetServer(beng2, retr, rcfg, enc,
+                               async_rounds=False) as server:
+        out = server.serve(as_requests(six))
+    assert out.shed >= 3, "a depth-1 queue on 2 slots must shed most of 6"
+    served = [r for r in out.results if r.status == "ok"]
+    assert len(served) + out.shed == 6
+    assert len(out.latencies) == len(served), \
+        "shed requests must stay out of the latency distribution"
+    for rid, r in enumerate(out.results):   # results are in request order
+        if r.status == "shed":
+            assert r.tokens == [] and not r.ok
+        else:
+            assert r.tokens == seq[tuple(six[rid])], \
+                f"request {rid} diverged while neighbors were shed"
+
+
+# ---------------------------------------------------------------------------------
+# (g) hygiene: thread leaks and CLI error mapping
+# ---------------------------------------------------------------------------------
+def test_no_thread_leak_after_mid_serve_crash(stack, monkeypatch):
+    """Crash the engine mid-round AFTER the verification worker has spawned
+    (call 5 lands in the overlapped stride of round 1, while the merged call
+    is in flight): the context manager must join the worker and release it —
+    thread count returns to the pre-server baseline, close() stays
+    idempotent."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    real_gen, calls = beng.gen, [0]
+
+    def crashing_gen(*a, **kw):
+        calls[0] += 1
+        if calls[0] >= 5:
+            raise RuntimeError("injected engine crash")
+        return real_gen(*a, **kw)
+
+    monkeypatch.setattr(beng, "gen", crashing_gen)
+    before = threading.active_count()
+    fleet = FleetServer(beng, retr, RCFG, enc, async_rounds=True)
+    with fleet:
+        with pytest.raises(RuntimeError, match="injected engine crash"):
+            fleet.serve(prompts)
+    assert threading.active_count() <= before, \
+        "the verification worker thread leaked past close()"
+    fleet.close()   # idempotent after __exit__
+
+
+def _cli(monkeypatch, capsys, argv):
+    from repro.launch import serve as serve_mod
+    monkeypatch.setattr(sys, "argv", ["serve"] + argv)
+    with pytest.raises(SystemExit) as ei:
+        serve_mod.main()
+    assert ei.value.code == 2
+    return capsys.readouterr().err
+
+
+def test_cli_rejects_bad_arrival_trace(monkeypatch, capsys):
+    err = _cli(monkeypatch, capsys,
+               ["--scheduler", "continuous",
+                "--arrival-trace", "@/no/such/trace.txt"])
+    assert "--arrival-trace" in err and "cannot read" in err
+    err = _cli(monkeypatch, capsys,
+               ["--scheduler", "continuous", "--arrival-trace", "0,zap,2"])
+    assert "malformed arrival time" in err
+
+
+def test_cli_rejects_misplaced_fault_flags(monkeypatch, capsys):
+    # malformed spec
+    err = _cli(monkeypatch, capsys, ["--mode", "spec", "--concurrency", "2",
+                                     "--inject-faults", "p_error=lots"])
+    assert "--inject-faults" in err
+    # the RaLMSeq baseline has no fault-tolerance shell
+    err = _cli(monkeypatch, capsys, ["--mode", "both", "--concurrency", "2",
+                                     "--inject-faults", "p_error=0.1"])
+    assert "--mode spec" in err
+    # the single-request path has no shell either
+    err = _cli(monkeypatch, capsys, ["--mode", "spec",
+                                     "--inject-faults", "p_error=0.1"])
+    assert "fleet scheduler" in err
+
+
+def test_make_arrivals_trace_file(tmp_path):
+    from repro.launch.serve import make_arrivals
+    f = tmp_path / "trace.txt"
+    f.write_text("0.0\n0.5  # a comment\n\n1.25\n")
+    assert make_arrivals(5, 0.0, f"@{f}") == [0.0, 0.5, 1.25, 0.0, 0.5]
+    with pytest.raises(ValueError, match="empty"):
+        make_arrivals(3, 0.0, " , ,")
+    with pytest.raises(ValueError, match=">= 0"):
+        make_arrivals(3, 0.0, "0,-1")
