@@ -33,7 +33,12 @@ recall@k >= 0.95, tests/test_quantized.py).
 host-side centroid scan + the backend-executed gathered bucket scan
 (`search_gathered`) — through the SAME backends, the regime where the
 paper reports its weakest speedups (1.04–1.39x) and backend efficiency
-matters most. Rows carry a `retriever` field either way.
+matters most. Rows carry a `retriever` field either way. ADR rows also
+record the probe's candidate width and peak candidate-buffer bytes:
+`cand_buf_bytes` is what the backend's gather actually holds (the fused
+kernel/sharded paths tile the gather to one (B, block_c) slab, so it is
+independent of C) vs `cand_buf_bytes_pregathered`, the (B, C, ...) slab a
+pre-gathered scan materializes — the fused path's memory win in numbers.
 
 Per cell: median seconds over --repeats (first call per shape excluded — it
 pays the XLA compile), and µs/query. ``--json`` emits BENCH_backends.json via
@@ -51,25 +56,14 @@ from repro.retrieval.backends import bootstrap_mesh_shards  # noqa: E402
 bootstrap_mesh_shards()                 # before common.py imports jax
 
 import argparse  # noqa: E402
-import time  # noqa: E402
 
 import numpy as np  # noqa: E402
 
-from common import add_json_arg, write_json  # noqa: E402
-
-
-def _timed(call, repeats):
-    call()                              # warm: jit compile for this shape
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        call()
-        ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+from common import add_json_arg, measure_wall, write_json  # noqa: E402
 
 
 def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
-        retriever="edr", n_clusters=64, nprobe=4):
+        retriever="edr", n_clusters=64, nprobe=4, block_c=None):
     import jax
 
     from repro.retrieval.backends import make_backend
@@ -110,21 +104,25 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
         emb = rng.standard_normal((n, dim)).astype(np.float32)
         emb /= np.linalg.norm(emb, axis=1, keepdims=True)
         backends = [
-            make_backend("numpy", emb),
-            make_backend("kernel", emb, force_ref=force_ref),
-            make_backend("sharded", emb, n_shards=mesh_shards or None),
-            make_backend("int8", emb),
-            make_backend("int8-kernel", emb, force_ref=force_ref),
-            make_backend("int8-sharded", emb, n_shards=mesh_shards or None),
+            make_backend("numpy", emb, block_c=block_c),
+            make_backend("kernel", emb, force_ref=force_ref, block_c=block_c),
+            make_backend("sharded", emb, n_shards=mesh_shards or None,
+                         block_c=block_c),
+            make_backend("int8", emb, block_c=block_c),
+            make_backend("int8-kernel", emb, force_ref=force_ref,
+                         block_c=block_c),
+            make_backend("int8-sharded", emb, n_shards=mesh_shards or None,
+                         block_c=block_c),
         ]
         built_shards = backends[2].n_shards     # may be < --mesh-shards
-        scans = []   # (backend, retriever axis, call) — call -> (ids, scores)
+        # (backend, axis, call, ivf-or-None) — call -> (ids, scores)
+        scans = []
         ref_call = {}                   # axis -> the flat fp32 reference scan
         proto = None                    # IVF clustering, built once per KB
         for b in backends:
             if retriever in ("edr", "both"):
                 scans.append((b, "edr",
-                              lambda qs, kk, b=b: b.search(qs, kk)))
+                              lambda qs, kk, b=b: b.search(qs, kk), None))
                 ref_call.setdefault("edr", scans[-1][2])
             if retriever in ("adr", "both"):
                 # ONE clustering per KB size, shared across backends: the
@@ -138,24 +136,37 @@ def run(kb_sizes, batches, k, dim, repeats, mesh_shards, kernel_interpret,
                 else:
                     r = ivf_with_backend(proto, b)
                 scans.append((b, "adr",
-                              lambda qs, kk, r=r: r.retrieve(qs, kk)))
+                              lambda qs, kk, r=r: r.retrieve(qs, kk), r))
                 ref_call.setdefault("adr", scans[-1][2])
         for B in batches:
             qs = rng.standard_normal((B, dim)).astype(np.float32)
-            for b, axis, call in scans:
+            for b, axis, call, ivf in scans:
                 rec = recall_at_k(call(qs, k)[0], ref_call[axis](qs, k)[0])
-                sec = _timed(lambda: call(qs, k), repeats)
-                rows.append(dict(backend=b.name, retriever=axis, n_docs=n,
-                                 batch=B, seconds=sec,
-                                 us_per_query=sec / B * 1e6,
-                                 exact=bool(b.exact),
-                                 recall_at_k=rec, kb_bytes=int(b.kb_bytes)))
+                sec, _, _ = measure_wall(lambda: call(qs, k),
+                                         repeats=repeats, warmup=1)
+                row = dict(backend=b.name, retriever=axis, n_docs=n,
+                           batch=B, seconds=sec,
+                           us_per_query=sec / B * 1e6,
+                           exact=bool(b.exact),
+                           recall_at_k=rec, kb_bytes=int(b.kb_bytes))
+                if ivf is not None:
+                    # peak candidate-buffer bytes for this cell's probe: what
+                    # the backend's gather actually holds (fused paths: one
+                    # (B, block_c) tile) vs the (B, C, ...) a pre-gathered
+                    # scan materializes
+                    C = ivf._cand_width(k)
+                    row.update(
+                        cand_width=int(C),
+                        cand_buf_bytes=int(b.gathered_scratch_bytes(B, C)),
+                        cand_buf_bytes_pregathered=int(
+                            b.pregathered_scratch_bytes(B, C)))
+                rows.append(row)
                 print(f"{axis:4s} {b.name:13s} {n:8d} {B:6d} {sec:10.5f} "
                       f"{sec / B * 1e6:10.1f} {rec:7.3f} "
                       f"{b.kb_bytes / 1e6:7.2f}")
     return rows, dict(k=k, dim=dim, repeats=repeats,
                       retriever=retriever, n_clusters=n_clusters,
-                      nprobe=nprobe,
+                      nprobe=nprobe, block_c=block_c,
                       devices=len(jax.devices()),
                       mesh_shards=built_shards,
                       kernel_mode=("pallas" if on_tpu or kernel_interpret
@@ -186,13 +197,18 @@ def main():
                     help="ADR axis: IVF cluster count (clamped to the KB size)")
     ap.add_argument("--nprobe", type=int, default=4,
                     help="ADR axis: probed clusters per query")
+    ap.add_argument("--block-c", type=int, default=0,
+                    help="fused-gather tile width for the kernel/sharded "
+                         "families (0 = kernels.dense_topk.FUSED_BLOCK_C); "
+                         "sets the ADR cells' peak candidate-buffer bytes")
     add_json_arg(ap)
     args = ap.parse_args()
     rows, meta = run([int(x) for x in args.kb_sizes.split(",")],
                      [int(x) for x in args.batches.split(",")],
                      args.k, args.dim, args.repeats, args.mesh_shards,
                      args.kernel_interpret, args.retriever,
-                     args.n_clusters, args.nprobe)
+                     args.n_clusters, args.nprobe,
+                     block_c=args.block_c or None)
     if args.json is not None:
         write_json("backends", {"config": meta, "rows": rows}, args.json)
 

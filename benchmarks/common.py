@@ -155,6 +155,24 @@ def run_requests(server, prompts, warmup: int = 1):
     return agg
 
 
+def measure_wall(fn, *, repeats: int = 3, warmup: int = 1):
+    """Monotonic-clock wall timing with warmup discard: runs ``fn`` ``warmup``
+    times untimed (jit compiles, cache fills), then ``repeats`` timed times,
+    and returns ``(median_seconds, samples, last_result)``. The median over
+    repeats is the committed number everywhere a BENCH_*.json reports wall
+    time — single-shot walls on a shared 1-core container are too noisy to
+    gate on."""
+    for _ in range(max(0, warmup)):
+        fn()
+    samples = []
+    result = None
+    for _ in range(max(1, repeats)):
+        t0 = time.monotonic()
+        result = fn()
+        samples.append(time.monotonic() - t0)
+    return float(np.median(samples)), samples, result
+
+
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 

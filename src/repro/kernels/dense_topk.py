@@ -30,6 +30,22 @@ one kernel. The int8→f32 cast happens tile-by-tile in VMEM, the scale multiply
 lands on the (B, block) score tile, and nothing fp32-sized ever round-trips
 through HBM — which is the point: HBM traffic (and KB residency) drop ~4x while
 the streaming top-k machinery is byte-for-byte the same `_select_topk`.
+
+The FUSED-GATHER variants (:func:`fused_gathered_topk_pallas`,
+:func:`quant_fused_gathered_topk_pallas`) remove the pre-gathered (B, C, d)
+tensor entirely: the kernel receives the DEVICE-RESIDENT KB (``pltpu.ANY``
+memory space — HBM on TPU) plus the padded candidate-id matrix, and per grid
+step DMAs each candidate row of the current ``(block_c,)`` tile from the KB
+into a (B, block_c, d) VMEM scratch buffer (double-buffered row copies,
+candidate ids read from scalar-prefetch SMEM). Peak candidate-buffer scratch
+is B * block_c * d * itemsize — independent of C — where the pre-gathered
+path materializes B * C * d in HBM; at C = 4096 with the default
+``block_c = 256`` that is a 16x reduction, which is what huge-probe ADR
+needs. Scores and the streaming top-k are bit-identical to the pre-gathered
+kernel: per-candidate dots don't care whether the row arrived via XLA gather
+or per-row DMA, and the merge is the same `_select_topk`. The int8 form DMAs
+both the code row and its fp32 scale, so not even the (B, C) scale gather
+materializes.
 """
 from __future__ import annotations
 
@@ -38,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG = -3.4e38
 
@@ -362,3 +379,249 @@ def quant_gathered_topk_pallas(queries: jax.Array, cand_emb: jax.Array,
         ],
         interpret=interpret,
     )(queries, cand_emb, cand_scl, cand)
+
+
+# ---------------------------------------------------------------------------
+# Fused in-kernel candidate gather: no pre-gathered (B, C, d) tensor.
+# ---------------------------------------------------------------------------
+
+FUSED_BLOCK_C = 256     # default gather tile: B * 256 * d * itemsize VMEM
+
+
+def fused_block_c(C: int, block_c: int = FUSED_BLOCK_C) -> int:
+    """The gather tile width a fused call at candidate width C actually uses:
+    lane-aligned, never tiny, never wider than C rounded up to the lane grid.
+    One definition shared by the kernels, the jnp oracle (so streaming merges
+    agree chunk-for-chunk), and the backends' scratch accounting."""
+    return max(min(block_c, -(-C // 128) * 128), 128)
+
+
+def _gather_tile(cand_sref, kb_ref, emb, sem, col0, total, block_c):
+    """DMA the current tile's candidate rows KB -> VMEM scratch, double
+    buffered: row i+1's copy is in flight while row i's is awaited. Candidate
+    ids come from the scalar-prefetch ref (SMEM — scalar reads are free there);
+    pad ids (-1) clamp to row 0, fetched-but-masked like the pre-gathered
+    path's jnp.take(maximum(cand, 0))."""
+    def dma(i, slot):
+        b = i // block_c
+        c = i - b * block_c
+        row = jnp.maximum(cand_sref[b, col0 + c], 0)
+        return pltpu.make_async_copy(kb_ref.at[row], emb.at[b, c],
+                                     sem.at[slot])
+
+    dma(0, 0).start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < total)
+        def _next():
+            dma(i + 1, 1 - slot).start()
+
+        dma(i, slot).wait()
+        return 0
+
+    jax.lax.fori_loop(0, total, body, 0)
+
+
+def _fused_gathered_kernel(cand_sref, q_ref, ids_ref, kb_ref, out_s_ref,
+                           out_i_ref, emb, run_s, run_i, sem, *, k: int):
+    """In-kernel gather form of `_gathered_topk_kernel`: same scores, same
+    streaming merge, but the (B, block_c, d) candidate tile is DMA'd from the
+    resident KB here instead of arriving through the BlockSpec pipeline."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    B, block_c, d = emb.shape
+    _gather_tile(cand_sref, kb_ref, emb, sem, j * block_c, B * block_c,
+                 block_c)
+    q = q_ref[...]                                        # (B, d)
+    ids = ids_ref[...]                                    # (B, block_c)
+    s = jax.lax.dot_general(q, emb[...], (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)  # (B, block_c)
+    s = jnp.where(ids >= 0, s, NEG)
+    merged_s = jnp.concatenate([run_s[...], s], axis=1)
+    merged_i = jnp.concatenate([run_i[...], ids], axis=1)
+    top_s, top_i = _select_topk(merged_s, merged_i, k)
+    run_s[...] = top_s
+    run_i[...] = top_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def fused_gathered_topk_pallas(queries: jax.Array, kb: jax.Array,
+                               cand: jax.Array, k: int, *,
+                               block_c: int = FUSED_BLOCK_C,
+                               interpret: bool = False):
+    """queries (B, d) f32; kb (N, d) f32 DEVICE-RESIDENT; cand (B, C) int32
+    (-1 pad) -> (scores (B, k), ids (B, k)); pad slots surface as (NEG, -1).
+
+    Peak candidate scratch is the B * block_c * d VMEM tile — C never
+    materializes. ``cand`` rides twice: as the scalar-prefetch operand (SMEM
+    scalar reads drive the row DMAs) and as a blocked VMEM input (vectorized
+    pad masking + id merge)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, d = queries.shape
+    C = cand.shape[1]
+    block_c = fused_block_c(C, block_c)
+    nb = -(-C // block_c)
+    pad = nb * block_c - C
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+
+    kernel = functools.partial(_fused_gathered_kernel, k=k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j, cand: (0, 0)),     # queries resident
+            pl.BlockSpec((B, block_c), lambda j, cand: (0, j)),  # id tiles
+            pl.BlockSpec(memory_space=pltpu.ANY),             # resident KB
+        ],
+        out_specs=[
+            pl.BlockSpec((B, k), lambda j, cand: (0, 0)),
+            pl.BlockSpec((B, k), lambda j, cand: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, block_c, d), jnp.float32),         # gather tile
+            pltpu.VMEM((B, k), jnp.float32),
+            pltpu.VMEM((B, k), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand, queries, cand, kb)
+
+
+def _quant_fused_gathered_kernel(cand_sref, q_ref, ids_ref, kb_ref, scl_ref,
+                                 out_s_ref, out_i_ref, emb, scl, run_s, run_i,
+                                 sem_e, sem_s, *, k: int):
+    """int8 form of the fused gather: each candidate row DMAs its int8 codes
+    AND its fp32 scale element (separate semaphore pair, same double
+    buffering), so neither the (B, C, d) codes nor the (B, C) scales ever
+    materialize. Dequant lands on the score tile, as in every quant kernel."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        run_s[...] = jnp.full_like(run_s, NEG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    B, block_c, d = emb.shape
+    col0 = j * block_c
+    total = B * block_c
+
+    def dmas(i, slot):
+        b = i // block_c
+        c = i - b * block_c
+        row = jnp.maximum(cand_sref[b, col0 + c], 0)
+        return (pltpu.make_async_copy(kb_ref.at[row], emb.at[b, c],
+                                      sem_e.at[slot]),
+                pltpu.make_async_copy(scl_ref.at[row], scl.at[b, c],
+                                      sem_s.at[slot]))
+
+    e0, s0 = dmas(0, 0)
+    e0.start()
+    s0.start()
+
+    def body(i, _):
+        slot = jax.lax.rem(i, 2)
+
+        @pl.when(i + 1 < total)
+        def _next():
+            en, sn = dmas(i + 1, 1 - slot)
+            en.start()
+            sn.start()
+
+        ew, sw = dmas(i, slot)
+        ew.wait()
+        sw.wait()
+        return 0
+
+    jax.lax.fori_loop(0, total, body, 0)
+    q = q_ref[...]                                        # (B, d)
+    ids = ids_ref[...]                                    # (B, block_c)
+    s = jax.lax.dot_general(q, emb[...].astype(jnp.float32),
+                            (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    s = s * scl[...]
+    s = jnp.where(ids >= 0, s, NEG)
+    merged_s = jnp.concatenate([run_s[...], s], axis=1)
+    merged_i = jnp.concatenate([run_i[...], ids], axis=1)
+    top_s, top_i = _select_topk(merged_s, merged_i, k)
+    run_s[...] = top_s
+    run_i[...] = top_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = run_s[...]
+        out_i_ref[...] = run_i[...]
+
+
+def quant_fused_gathered_topk_pallas(queries: jax.Array, kb_q: jax.Array,
+                                     scales: jax.Array, cand: jax.Array,
+                                     k: int, *, block_c: int = FUSED_BLOCK_C,
+                                     interpret: bool = False):
+    """queries (B, d) f32; kb_q (N, d) int8 + scales (N,) f32 both
+    DEVICE-RESIDENT; cand (B, C) int32 (-1 pad) -> (scores (B, k),
+    ids (B, k)); pad slots surface as (NEG, -1). Peak candidate scratch is
+    B * block_c * (d + 4) bytes."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, d = queries.shape
+    C = cand.shape[1]
+    block_c = fused_block_c(C, block_c)
+    nb = -(-C // block_c)
+    pad = nb * block_c - C
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+
+    kernel = functools.partial(_quant_fused_gathered_kernel, k=k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, d), lambda j, cand: (0, 0)),     # queries resident
+            pl.BlockSpec((B, block_c), lambda j, cand: (0, j)),  # id tiles
+            pl.BlockSpec(memory_space=pltpu.ANY),             # resident codes
+            pl.BlockSpec(memory_space=pltpu.ANY),             # resident scales
+        ],
+        out_specs=[
+            pl.BlockSpec((B, k), lambda j, cand: (0, 0)),
+            pl.BlockSpec((B, k), lambda j, cand: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, block_c, d), jnp.int8),            # code tile
+            pltpu.VMEM((B, block_c), jnp.float32),            # scale tile
+            pltpu.VMEM((B, k), jnp.float32),
+            pltpu.VMEM((B, k), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand, queries, cand, kb_q, scales)

@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
-from repro.kernels.dense_topk import (dense_topk_pallas, gathered_topk_pallas,
+from repro.kernels.dense_topk import (FUSED_BLOCK_C, dense_topk_pallas,
+                                      fused_gathered_topk_pallas,
+                                      gathered_topk_pallas,
+                                      quant_fused_gathered_topk_pallas,
                                       quant_gathered_topk_pallas,
                                       quant_topk_pallas)
 
@@ -42,13 +45,32 @@ def gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array, k: int,
 
     The gather materializes (B, C, d) in HBM before the kernel streams it
     (unlike the numpy path, which chunks rows to bound host scratch) —
-    acceptable while B*C*d stays well under the KB's own footprint; tiling
-    the gather into the pallas grid is the known next step for huge-probe
-    regimes."""
+    acceptable while B*C*d stays well under the KB's own footprint. The
+    serving path uses :func:`fused_gathered_topk` instead, which tiles the
+    gather into the pallas grid; this pre-gathered form stays as the
+    small-probe fast path and the fused kernels' parity baseline."""
     emb = jnp.take(kb, jnp.maximum(cand, 0), axis=0)     # (B, C, d)
     if force_ref:
         return ref.gathered_topk_ref(queries, emb, cand, k)
     return gathered_topk_pallas(queries, emb, cand, k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "block_c", "force_ref"))
+def fused_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
+                        k: int, block_c: int = FUSED_BLOCK_C,
+                        force_ref: bool = False):
+    """The fused-gather ADR/IVF probe: query b scores only the KB rows named
+    by cand[b] ((B, C) int32, -1 = padding), and the candidate gather runs
+    INSIDE the kernel — each (block_c, d) tile DMAs from the resident KB per
+    grid step, so peak candidate scratch is B * block_c * d regardless of C
+    (no (B, C, d) materialization anywhere, including under ``force_ref``,
+    whose oracle streams the same tiles with a running top-k). Results are
+    byte-identical to :func:`gathered_topk`."""
+    if force_ref:
+        return ref.fused_gathered_topk_ref(queries, kb, cand, k,
+                                           block_c=block_c)
+    return fused_gathered_topk_pallas(queries, kb, cand, k, block_c=block_c,
+                                      interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("k", "force_ref"))
@@ -77,6 +99,24 @@ def quant_gathered_topk(queries: jax.Array, kb_q: jax.Array,
         return ref.quant_gathered_topk_ref(queries, emb, scl, cand, k)
     return quant_gathered_topk_pallas(queries, emb, scl, cand, k,
                                       interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("k", "block_c", "force_ref"))
+def quant_fused_gathered_topk(queries: jax.Array, kb_q: jax.Array,
+                              scales: jax.Array, cand: jax.Array, k: int,
+                              block_c: int = FUSED_BLOCK_C,
+                              force_ref: bool = False):
+    """Fused-gather form of :func:`quant_gathered_topk`: each candidate row's
+    int8 codes AND fp32 scale DMA from the resident arrays inside the kernel
+    — neither the (B, C, d) code gather nor the (B, C) scale gather
+    materializes; peak candidate scratch is B * block_c * (d + 4) bytes.
+    Byte-identical to :func:`quant_gathered_topk`."""
+    if force_ref:
+        return ref.quant_fused_gathered_topk_ref(queries, kb_q, scales, cand,
+                                                 k, block_c=block_c)
+    return quant_fused_gathered_topk_pallas(queries, kb_q, scales, cand, k,
+                                            block_c=block_c,
+                                            interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("force_ref",))

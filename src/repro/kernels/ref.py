@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dense_topk import NEG
+from repro.kernels.dense_topk import FUSED_BLOCK_C, NEG, fused_block_c
 
 
 def dense_topk_ref(queries: jax.Array, kb: jax.Array, k: int):
@@ -26,6 +26,77 @@ def gathered_topk_ref(queries: jax.Array, cand_emb: jax.Array,
     s = jnp.where(cand >= 0, s, NEG)
     scores, pos = jax.lax.top_k(s, k)
     return scores, jnp.take_along_axis(cand, pos, axis=1).astype(jnp.int32)
+
+
+def _pad_chunks(cand: jax.Array, block_c: int):
+    """(B, C) ids -> (nb, B, bc) id-tile chunks, -1-padded to a bc multiple —
+    the same tiling the fused kernels walk, so streaming merges agree
+    chunk-for-chunk."""
+    B, C = cand.shape
+    bc = fused_block_c(C, block_c)
+    nb = -(-C // bc)
+    pad = nb * bc - C
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+    return cand.reshape(B, nb, bc).transpose(1, 0, 2)
+
+
+def _stream_topk(chunks, score_chunk, k: int):
+    """Running top-k over id-tile chunks: merge each chunk's scores into a
+    (B, k) carry. The carry concatenates BEFORE the chunk, so lax.top_k's
+    first-position tie break keeps resolving ties toward earlier columns —
+    identical to one top_k over the full width, and to the kernels'
+    `_select_topk` merge."""
+    B = chunks.shape[1]
+
+    def step(carry, ch):
+        run_s, run_i = carry
+        s = jnp.where(ch >= 0, score_chunk(ch), NEG)
+        merged_s = jnp.concatenate([run_s, s], axis=1)
+        merged_i = jnp.concatenate([run_i, ch], axis=1)
+        top_s, pos = jax.lax.top_k(merged_s, k)
+        return (top_s, jnp.take_along_axis(merged_i, pos, axis=1)), None
+
+    init = (jnp.full((B, k), NEG, jnp.float32),
+            jnp.full((B, k), -1, jnp.int32))
+    (s, i), _ = jax.lax.scan(step, init, chunks)
+    return s, i.astype(jnp.int32)
+
+
+def fused_gathered_topk_ref(queries: jax.Array, kb: jax.Array,
+                            cand: jax.Array, k: int, *,
+                            block_c: int = FUSED_BLOCK_C):
+    """Streaming oracle for :func:`fused_gathered_topk_pallas`: takes the
+    RESIDENT KB (not a pre-gathered tensor) and scans candidate-id tiles with
+    a running top-k, so even the oracle's peak candidate scratch is one
+    (B, block_c, d) gather — this is what serves under ``force_ref``.
+    Bit-identical to :func:`gathered_topk_ref` over jnp.take(kb, cand):
+    per-candidate dots are unchanged by chunking over C, and the streaming
+    merge preserves the canonical first-position tie break."""
+    q = queries.astype(jnp.float32)
+
+    def score_chunk(ch):
+        emb = jnp.take(kb, jnp.maximum(ch, 0), axis=0).astype(jnp.float32)
+        return jnp.einsum("bd,bcd->bc", q, emb)
+
+    return _stream_topk(_pad_chunks(cand, block_c), score_chunk, k)
+
+
+def quant_fused_gathered_topk_ref(queries: jax.Array, kb_q: jax.Array,
+                                  scales: jax.Array, cand: jax.Array, k: int,
+                                  *, block_c: int = FUSED_BLOCK_C):
+    """int8 form of :func:`fused_gathered_topk_ref`: codes AND per-row scales
+    gather chunk-wise from the resident arrays; the scale multiply lands on
+    the score chunk (the kernel operation order)."""
+    q = queries.astype(jnp.float32)
+
+    def score_chunk(ch):
+        idx = jnp.maximum(ch, 0)
+        emb = jnp.take(kb_q, idx, axis=0).astype(jnp.float32)
+        s = jnp.einsum("bd,bcd->bc", q, emb)
+        return s * jnp.take(scales, idx, axis=0).astype(jnp.float32)
+
+    return _stream_topk(_pad_chunks(cand, block_c), score_chunk, k)
 
 
 def quant_dense_topk_ref(queries: jax.Array, kb_q: jax.Array,

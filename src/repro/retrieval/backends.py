@@ -140,6 +140,23 @@ class DenseSearchBackend(Protocol):
         shaped by the candidate width ``C``."""
         ...
 
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        """Peak candidate-buffer bytes ONE ``search_gathered`` call at batch B
+        and candidate width C materializes — the gathered-embedding scratch,
+        not the resident KB. Kernel/sharded backends route through the fused
+        in-kernel gather, so this is a (B, block_c, d) tile independent of C;
+        the numpy paths report their row-chunked host scratch. Benchmarks
+        record it next to :meth:`pregathered_scratch_bytes` (the (B, C, d)
+        tensor the pre-gathered path would build) to track the reduction."""
+        ...
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        """What a naive pre-gathered (B, C, d) candidate materialization costs
+        at this backend's resident dtype (int8 backends also gather a (B, C)
+        fp32 scale row). The baseline `gathered_scratch_bytes` is measured
+        against."""
+        ...
+
 
 class _JitShapeMixin:
     """Per-(B, k) compile tracking for jit-backed scans. ``n_rows`` is the
@@ -293,6 +310,15 @@ class FlatBackend:
     def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
         return False
 
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        # gathered_scores row-chunks the (rows, C, d) f32 gather to ~64MB
+        d = self.embeddings.shape[1]
+        step = max(1, 16_000_000 // max(C * d, 1))
+        return min(B, step) * C * d * 4
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        return B * C * self.embeddings.shape[1] * 4
+
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         s = queries @ self.embeddings.T                  # (B, N)
         self.calls += 1
@@ -315,24 +341,38 @@ class KernelBackend(_JitShapeMixin):
     """Pallas blocked top-k (`kernels.ops.dense_topk`): KB tiles stream
     HBM -> VMEM, the query block stays MXU-resident. The KB embedding matrix
     is put on device ONCE here — per-call uploads of a multi-GB index would
-    dwarf the scan itself. ``force_ref=True`` swaps the kernel body for its
-    jnp oracle (same results; wall-clock benchmarks use it off-TPU, where
-    interpret-mode overhead would swamp the numbers)."""
+    dwarf the scan itself. The gathered (ADR) scan routes through the FUSED
+    in-kernel gather (`kernels.ops.fused_gathered_topk`): candidate rows DMA
+    from the resident KB per (B, block_c, d) tile, so no (B, C, d) tensor
+    materializes however wide the probe. ``force_ref=True`` swaps the kernel
+    bodies for their jnp oracles (same results — the fused oracle streams the
+    same tiles; wall-clock benchmarks use it off-TPU, where interpret-mode
+    overhead would swamp the numbers)."""
 
     name = "kernel"
     exact = True
 
-    def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
+    def __init__(self, embeddings: np.ndarray, force_ref: bool = False,
+                 block_c: Optional[int] = None):
         import jax
 
-        from repro.kernels.ops import dense_topk, gathered_topk
+        from repro.kernels.dense_topk import FUSED_BLOCK_C
+        from repro.kernels.ops import dense_topk, fused_gathered_topk
         self._fn = dense_topk
-        self._fn_gathered = gathered_topk
+        self._fn_gathered = fused_gathered_topk
         self._force_ref = force_ref
+        self._block_c = block_c or FUSED_BLOCK_C
         self._kb = jax.device_put(np.asarray(embeddings, np.float32))
         self.kb_bytes = self._kb.nbytes
         self.calls = 0
         self._init_shapes(self._kb.shape[0])
+
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        from repro.kernels.dense_topk import fused_block_c
+        return B * fused_block_c(C, self._block_c) * self._kb.shape[1] * 4
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        return B * C * self._kb.shape[1] * 4
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
@@ -351,6 +391,7 @@ class KernelBackend(_JitShapeMixin):
                                         self._kb,
                                         jnp.asarray(cand, jnp.int32),
                                         min(k, cand.shape[1]),
+                                        block_c=self._block_c,
                                         force_ref=self._force_ref)
         self.calls += 1
         return _sentinels_to_contract(ids, scores)
@@ -374,13 +415,16 @@ class ShardedBackend(_JitShapeMixin):
     exact = True
 
     def __init__(self, embeddings: np.ndarray, n_shards: Optional[int] = None,
-                 axis: str = "data", mesh=None):
+                 axis: str = "data", mesh=None,
+                 block_c: Optional[int] = None):
         import jax
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
 
+        from repro.kernels.dense_topk import FUSED_BLOCK_C
         from repro.retrieval.sharded import (sharded_dense_topk,
                                              sharded_gathered_topk)
+        self._block_c = block_c or FUSED_BLOCK_C
         if mesh is None:
             devs = jax.devices()
             n = len(devs) if not n_shards else min(n_shards, len(devs))
@@ -417,7 +461,8 @@ class ShardedBackend(_JitShapeMixin):
         def _scan_gathered(q, kb, scales, cand, k):
             return sharded_gathered_topk(q, kb, cand, k, self.mesh,
                                          axis=self.axis, n_total=self.n_total,
-                                         scales=scales)
+                                         scales=scales,
+                                         block_c=self._block_c)
 
         self._scan = _scan
         self._scan_gathered = _scan_gathered
@@ -425,6 +470,20 @@ class ShardedBackend(_JitShapeMixin):
     def _encode(self, embeddings: np.ndarray):
         """Resident representation: ``(matrix (N, d), per-row scales | None)``."""
         return np.asarray(embeddings, np.float32), None
+
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        # per-shard peak: the shard program's chunked gather holds one
+        # (B, block_c, d) tile (+ a (B, block_c) scale chunk when int8)
+        from repro.kernels.dense_topk import fused_block_c
+        bc = fused_block_c(C, self._block_c)
+        item = self._kb.dtype.itemsize
+        return B * bc * (self._kb.shape[1] * item
+                         + (4 if self._scales is not None else 0))
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        item = self._kb.dtype.itemsize
+        return B * C * (self._kb.shape[1] * item
+                        + (4 if self._scales is not None else 0))
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
@@ -471,6 +530,15 @@ class QuantizedFlatBackend:
     def cold_shape_gathered(self, B: int, C: int, k: int) -> bool:
         return False
 
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        # quant_gathered_scores casts each row-chunk's codes to f32
+        d = self.codes.shape[1]
+        step = max(1, 16_000_000 // max(C * d, 1))
+        return min(B, step) * C * d * 4
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        return B * C * (self.codes.shape[1] + 4)    # int8 codes + f32 scales
+
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         s = quant_scores(self.codes, self.scales,
                          np.asarray(queries, np.float32))
@@ -492,27 +560,42 @@ class QuantizedFlatBackend:
 
 class QuantizedKernelBackend(_JitShapeMixin):
     """The fused Pallas dequant+matmul+top-k (`kernels.ops.quant_dense_topk`
-    / `quant_gathered_topk`): int8 codes + fp32 row scales are put on device
-    ONCE; KB tiles stream HBM -> VMEM as int8 (4x less scan traffic than the
-    fp32 kernel) and the cast + scale multiply happen on chip. ``force_ref``
-    routes to the jnp oracle exactly like :class:`KernelBackend`."""
+    / `quant_fused_gathered_topk`): int8 codes + fp32 row scales are put on
+    device ONCE; KB tiles stream HBM -> VMEM as int8 (4x less scan traffic
+    than the fp32 kernel) and the cast + scale multiply happen on chip. The
+    gathered (ADR) scan uses the fused in-kernel gather — each candidate
+    row's codes AND scale DMA per tile, so neither gather materializes at
+    probe width. ``force_ref`` routes to the jnp oracles exactly like
+    :class:`KernelBackend`."""
 
     name = "int8-kernel"
     exact = False
 
-    def __init__(self, embeddings: np.ndarray, force_ref: bool = False):
+    def __init__(self, embeddings: np.ndarray, force_ref: bool = False,
+                 block_c: Optional[int] = None):
         import jax
 
-        from repro.kernels.ops import quant_dense_topk, quant_gathered_topk
+        from repro.kernels.dense_topk import FUSED_BLOCK_C
+        from repro.kernels.ops import (quant_dense_topk,
+                                       quant_fused_gathered_topk)
         codes, scales = quantize_kb(embeddings)
         self._fn = quant_dense_topk
-        self._fn_gathered = quant_gathered_topk
+        self._fn_gathered = quant_fused_gathered_topk
         self._force_ref = force_ref
+        self._block_c = block_c or FUSED_BLOCK_C
         self._kb = jax.device_put(codes)
         self._kb_scales = jax.device_put(scales)
         self.kb_bytes = codes.nbytes + scales.nbytes
         self.calls = 0
         self._init_shapes(codes.shape[0])
+
+    def gathered_scratch_bytes(self, B: int, C: int) -> int:
+        from repro.kernels.dense_topk import fused_block_c
+        bc = fused_block_c(C, self._block_c)
+        return B * bc * (self._kb.shape[1] + 4)     # int8 tile + f32 scales
+
+    def pregathered_scratch_bytes(self, B: int, C: int) -> int:
+        return B * C * (self._kb.shape[1] + 4)
 
     def search(self, queries: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
@@ -529,6 +612,7 @@ class QuantizedKernelBackend(_JitShapeMixin):
                                         self._kb, self._kb_scales,
                                         jnp.asarray(cand, jnp.int32),
                                         min(k, cand.shape[1]),
+                                        block_c=self._block_c,
                                         force_ref=self._force_ref)
         self.calls += 1
         return _sentinels_to_contract(ids, scores)
@@ -555,23 +639,28 @@ BACKENDS = ("numpy", "kernel", "sharded", "int8", "int8-kernel",
 
 def make_backend(name: str, embeddings: np.ndarray, *,
                  n_shards: Optional[int] = None, mesh=None,
-                 force_ref: bool = False) -> DenseSearchBackend:
+                 force_ref: bool = False,
+                 block_c: Optional[int] = None) -> DenseSearchBackend:
     """CLI-name -> backend instance (the one constructor branch in the repo).
 
     ``n_shards``/``mesh`` configure the sharded backends (default: one
     shard per visible device); ``force_ref`` routes the kernel backends
-    through the jnp oracle instead of the Pallas body."""
+    through the jnp oracle instead of the Pallas body; ``block_c`` overrides
+    the fused-gather tile width (kernel/sharded families; default
+    `kernels.dense_topk.FUSED_BLOCK_C`)."""
     if name == "numpy":
         return FlatBackend(embeddings)
     if name == "kernel":
-        return KernelBackend(embeddings, force_ref=force_ref)
+        return KernelBackend(embeddings, force_ref=force_ref, block_c=block_c)
     if name == "sharded":
-        return ShardedBackend(embeddings, n_shards=n_shards, mesh=mesh)
+        return ShardedBackend(embeddings, n_shards=n_shards, mesh=mesh,
+                              block_c=block_c)
     if name == "int8":
         return QuantizedFlatBackend(embeddings)
     if name == "int8-kernel":
-        return QuantizedKernelBackend(embeddings, force_ref=force_ref)
+        return QuantizedKernelBackend(embeddings, force_ref=force_ref,
+                                      block_c=block_c)
     if name == "int8-sharded":
         return QuantizedShardedBackend(embeddings, n_shards=n_shards,
-                                       mesh=mesh)
+                                       mesh=mesh, block_c=block_c)
     raise KeyError(f"unknown retrieval backend {name!r}; known: {BACKENDS}")

@@ -134,7 +134,8 @@ def sharded_dense_topk(queries: jax.Array, kb: jax.Array, k: int, mesh,
 def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
                           k: int, mesh, axis: str = "data", *,
                           n_total: Optional[int] = None,
-                          scales: Optional[jax.Array] = None):
+                          scales: Optional[jax.Array] = None,
+                          block_c: Optional[int] = None):
     """The ADR/IVF probe over the sharded KB: queries (B, d) and the padded
     candidate-id matrix cand (B, C) replicated; kb (N, d) sharded over
     ``axis``. -> (scores (B, k), global ids (B, k)); pad slots (-1 in cand,
@@ -151,15 +152,23 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
 
     ``cand`` rows must be id-sorted with -1 pads last and contain no
     duplicate real ids (IVF buckets partition the KB, so probe gathers
-    satisfy this by construction). Each shard materializes its (B, C, d)
-    gather in HBM before scoring — fine while B*C*d stays well under the
-    shard's KB slice; tiling C inside the shard program (still one
-    collective) is the known next step for huge-probe regimes.
+    satisfy this by construction). The per-shard gather is TILED: the shard
+    program walks ``cand`` in lane-aligned ``block_c`` chunks
+    (`kernels.dense_topk.FUSED_BLOCK_C` by default, the same tile width the
+    fused kernels use), gathering one (B, block_c, d) slab at a time via
+    `lax.map` — peak per-shard candidate scratch is independent of the probe
+    width C, and the (B, C) score matrix it builds chunk-wise is a factor d
+    smaller. Chunking cannot change a bit: per-candidate dots are computed
+    identically and the concatenated chunks reproduce the untiled score
+    matrix column-for-column.
 
     ``scales`` (N,) f32, when given, marks ``kb`` as int8 codes with per-row
     symmetric scales: each shard gathers its resident candidates' codes AND
-    row scales, scoring ``(q . codes) * scale`` before the residency mask —
-    the probe rides the same single collective over the int8-resident mesh."""
+    row scales chunk-wise, scoring ``(q . codes) * scale`` before the
+    residency mask — the probe rides the same single collective over the
+    int8-resident mesh."""
+    from repro.kernels.dense_topk import FUSED_BLOCK_C, fused_block_c
+
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     N = kb.shape[0]
     if n_total is None:
@@ -174,19 +183,37 @@ def sharded_gathered_topk(queries: jax.Array, kb: jax.Array, cand: jax.Array,
     # any single shard may hold ALL of a row's candidates, so the per-shard
     # contribution cannot be divided by n_shards
     k_local = min(k, C)
+    # pad the candidate matrix to a tile multiple (-1 = pad -> not owned by
+    # any shard -> NEG score, sentinel id; appended columns can't perturb the
+    # positional tie break)
+    bc = fused_block_c(C, block_c or FUSED_BLOCK_C)
+    nbc = -(-C // bc)
+    cpad = nbc * bc - C
+    if cpad:
+        cand = jnp.pad(cand, ((0, 0), (0, cpad)), constant_values=-1)
 
     def local(q, cd, kb_shard, scl_shard):
         kb2 = kb_shard[0] if kb_shard.ndim == 3 else kb_shard
         shard_idx = jax.lax.axis_index(axis)
         lo = shard_idx * shard_n
         own = (cd >= lo) & (cd < lo + shard_n) & (cd < n_total)
-        emb = jnp.take(kb2, jnp.clip(cd - lo, 0, shard_n - 1), axis=0)
-        s = jnp.einsum("bcd,bd->bc", emb.astype(jnp.float32),
-                       q.astype(jnp.float32))
+        B = q.shape[0]
+        qf = q.astype(jnp.float32)
+        scl2 = None
         if scl_shard is not None:
             scl2 = scl_shard[0] if scl_shard.ndim == 2 else scl_shard
-            scl = jnp.take(scl2, jnp.clip(cd - lo, 0, shard_n - 1), axis=0)
-            s = s * scl.astype(jnp.float32)
+
+        def score_chunk(ch):                   # (B, bc) ids -> (B, bc) f32
+            idx = jnp.clip(ch - lo, 0, shard_n - 1)
+            emb = jnp.take(kb2, idx, axis=0)   # (B, bc, d): the ONLY gather
+            s = jnp.einsum("bcd,bd->bc", emb.astype(jnp.float32), qf)
+            if scl2 is not None:
+                s = s * jnp.take(scl2, idx, axis=0).astype(jnp.float32)
+            return s
+
+        chunks = cd.reshape(B, nbc, bc).transpose(1, 0, 2)
+        s = jax.lax.map(score_chunk, chunks)   # sequential: one slab live
+        s = s.transpose(1, 0, 2).reshape(B, nbc * bc)
         s = jnp.where(own, s, NEG)
         gids = jnp.where(own, cd, -1)          # non-resident/pad: sentinel id
         s_l, pos = jax.lax.top_k(s, k_local)

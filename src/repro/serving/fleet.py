@@ -98,6 +98,19 @@ class FleetResult:
     seed_failures: int = 0
     degraded_rounds: int = 0
     worker_crashes: int = 0
+    # measured wall-clock overlap ledger (monotonic clock, this box — NOT the
+    # modeled timeline): total wall seconds spent inside merged verification
+    # KB calls (verify_wall_s — accumulated in sync AND async rounds), wall
+    # seconds of the overlapped speculation strides the main thread ran while
+    # a call was in flight (overlap_wall_s), and the intersection of the two
+    # span sets (measured_overlap_s) — the seconds during which the worker's
+    # BLAS/device scan and the LM stride were DEMONSTRABLY concurrent. Only
+    # async rounds with the gate open contribute to the latter two; sync
+    # fleets leave them at exactly 0. measured_overlap_s <=
+    # min(verify_wall_s, overlap_wall_s) by construction.
+    verify_wall_s: float = 0.0
+    overlap_wall_s: float = 0.0
+    measured_overlap_s: float = 0.0
 
     @property
     def degraded_requests(self) -> int:
@@ -148,6 +161,16 @@ class FleetServer(_ServerBase):
         self.merged_rows_saved = 0
         # monotonic count of failed admission-seed calls (same diff pattern)
         self.seed_failures = 0
+        # measured wall-clock overlap ledger (same diff pattern; see
+        # FleetResult). time.monotonic spans: the worker records its KB-call
+        # span in _verify_span, the round loop intersects it with the
+        # overlapped stride's span. Both numpy BLAS and XLA release the GIL,
+        # so the spans genuinely interleave even on one core — a positive
+        # intersection is measured (not modeled) concurrency.
+        self.verify_wall = 0.0
+        self.overlap_wall = 0.0
+        self.overlap_measured = 0.0
+        self._verify_span = None
 
     # ---- per-slot predicates (fleet versions of _ServerBase._done/_budget) ---------
     # The inherited single-request forms read engine.finished/.generated, which on
@@ -231,9 +254,19 @@ class FleetServer(_ServerBase):
         RetrievalFailed when the budget runs out; the round loop degrades).
         With async rounds this body runs on the worker thread — the publish
         is what lets slot t+1's overlapped speculation hit results verified
-        for slot t, and it is safe because the shared tier locks."""
-        ids, scores = self._retrieve_guarded(queries, k)
-        self._shared_put(queries, ids, scores)
+        for slot t, and it is safe because the shared tier locks. The
+        monotonic span of the call is recorded either way (the round loop
+        intersects it with the overlapped stride to measure real
+        concurrency); reading it from the main thread is safe only after the
+        future resolves."""
+        t0 = time.monotonic()
+        try:
+            ids, scores = self._retrieve_guarded(queries, k)
+            self._shared_put(queries, ids, scores)
+        finally:
+            t1 = time.monotonic()
+            self._verify_span = (t0, t1)
+            self.verify_wall += t1 - t0
         return ids, scores
 
     def _seed_slots(self, pairs) -> float:
@@ -293,21 +326,31 @@ class FleetServer(_ServerBase):
 
     def _overlap_speculate(self, slots: Sequence[int], states,
                            strides: Dict[int, int], a_est: float,
-                           b_est: float) -> tuple:
+                           b_est: float, fut=None) -> tuple:
         """Round t+1's lockstep speculation, run while round t's merged
         verification call is in flight. Steps are recorded per slot as
         TENTATIVE carry steps (never into the round scratch): a slot that
         round t rolls back discards them wholesale.
 
-        The overlap is bounded by the verification window: sub-steps run only
-        while the next one is expected to still fit under ``b_est`` — those
-        steps are FREE on the analytic timeline (the round pays
-        ``max(a_overlap, b)``), so an overlapped round costs no more than a
-        synchronous one up to a_est/b_est estimation error, even when every
-        slot's overlap is later invalidated. ``rcfg.async_min_overlap`` forces that many sub-steps
-        regardless of the window (tests use it to exercise the carry paths on
-        stacks whose retrieval is too cheap to hide anything). Never
-        speculates past a slot's next stride.
+        Two bounds compose. The MODELED window: sub-steps run only while the
+        next one is expected to still fit under ``b_est`` — those steps are
+        FREE on the analytic timeline (the round pays ``max(a_overlap, b)``),
+        so an overlapped round costs no more than a synchronous one up to
+        a_est/b_est estimation error, even when every slot's overlap is later
+        invalidated; inside it a slot speculates at most its next stride (the
+        carry that pre-fills round t+1). The IN-FLIGHT extension: when the
+        verification future is handed in and has NOT resolved yet, keep
+        speculating past both the window and the per-slot stride cap, up to
+        each slot's remaining token budget — the worker is still inside its
+        KB scan / service wait (GIL released), so on the wall clock those
+        deep steps are reclaimed idle time, and every one of them pre-fills a
+        future stride, so surviving deep carries collapse whole rounds (and
+        their merged KB calls). ``fut.done()`` is the (cheap) oracle: a call
+        that returns quickly grants no extra depth, a slow one — big KB,
+        remote/disk service latency — grants a lot. ``rcfg.async_min_overlap``
+        forces that many sub-steps regardless of the window (tests use it to
+        exercise the carry paths on stacks whose retrieval is too cheap to
+        hide anything).
 
         Analytic accounting: overlapped sub-steps are charged at ``a_est``
         (the round's calibrated uncontended per-step cost), NOT at their
@@ -321,11 +364,13 @@ class FleetServer(_ServerBase):
         overlap: Dict[int, List[tuple]] = {b: [] for b in slots}
         n_sub = 0
         while True:
+            in_flight = fut is not None and not fut.done()
             if (n_sub >= self.rcfg.async_min_overlap
-                    and (n_sub + 1) * a_est > b_est):
-                break                       # next step would overrun the window
+                    and (n_sub + 1) * a_est > b_est
+                    and not in_flight):
+                break                       # window overrun and call resolved
             doers = [b for b in slots
-                     if len(overlap[b]) < strides[b]
+                     if (len(overlap[b]) < strides[b] or in_flight)
                      and not self._slot_done(b, states[b])]
             if not doers:
                 break
@@ -409,18 +454,31 @@ class FleetServer(_ServerBase):
             b_est = r.stats.model_latency(len(uniq))
             if b_est > rcfg.async_gate_ratio * a_est:
                 # ---- stage 2: overlap the call with round t+1's stride ------
+                self._verify_span = None
                 self._inflight = self._pool.submit(
                     self._verify_merged, uniq, k)
+                t_ov0 = time.monotonic()
                 try:
                     overlap, overlap_a = self._overlap_speculate(
-                        participants, states, strides, a_est, b_est)
+                        participants, states, strides, a_est, b_est,
+                        fut=self._inflight)
                 finally:
+                    t_ov1 = time.monotonic()
                     # clear the handle BEFORE joining: if the worker call
                     # raised, a still-set handle would poison _drain_inflight
                     # and close() with the same re-raise
                     fut, self._inflight = self._inflight, None
                 try:
                     gt_u, _ = fut.result()
+                    # measured concurrency: the worker's KB-call span
+                    # (written before the future resolved — the join is the
+                    # happens-before edge) intersected with the overlapped
+                    # stride's span, both on the monotonic clock
+                    if self._verify_span is not None:
+                        v0, v1 = self._verify_span
+                        self.overlap_wall += t_ov1 - t_ov0
+                        self.overlap_measured += max(
+                            0.0, min(v1, t_ov1) - max(v0, t_ov0))
                 except Exception:
                     # worker crash recovery: the in-flight verification died
                     # (RetrievalFailed after its retries, or anything else the
@@ -534,6 +592,7 @@ class FleetServer(_ServerBase):
         m0, ms0 = self.merged_rows, self.merged_rows_saved
         r0e, r0o, r0f = r.stats.errors, r.stats.timeouts, r.stats.failed_calls
         sf0 = self.seed_failures
+        vw0, ow0, mo0 = self.verify_wall, self.overlap_wall, self.overlap_measured
         states = [self._new_request_state(
             rid=b, max_new=max_new[b] if max_new is not None else None)
             for b in range(B)]
@@ -569,6 +628,9 @@ class FleetServer(_ServerBase):
         fleet.kb_timeouts = r.stats.timeouts - r0o
         fleet.kb_failures = r.stats.failed_calls - r0f
         fleet.seed_failures = self.seed_failures - sf0
+        fleet.verify_wall_s = self.verify_wall - vw0
+        fleet.overlap_wall_s = self.overlap_wall - ow0
+        fleet.measured_overlap_s = self.overlap_measured - mo0
         # per-slot time fields are the SHARED fleet timeline (lockstep rounds
         # finish together): don't sum them across slots — like kb_calls above,
         # summing overcounts by the concurrency factor. Aggregate via

@@ -178,7 +178,45 @@ def test_async_fleet_gate_closes_for_cheap_retrievers(stack):
 
 
 # ---------------------------------------------------------------------------------
-# (e) single-request path on the generalized multi-step carry
+# (e) measured wall-clock overlap ledger (monotonic clock)
+# ---------------------------------------------------------------------------------
+def test_overlap_ledger_consistency(stack):
+    """Sync fleets measure verification wall but no overlap (exact zeros);
+    async fleets with the gate forced open record overlapped-stride wall and
+    a span intersection bounded by both sides: 0 <= measured <= min(verify,
+    overlap). The strictly-positive overlap claim is the perf-marked test
+    below — this one must hold on any scheduler."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    sync = FleetServer(beng, retr, RCFG, enc, async_rounds=False).serve(prompts)
+    assert sync.verify_wall_s > 0
+    assert sync.overlap_wall_s == 0.0 and sync.measured_overlap_s == 0.0
+    asyn = FleetServer(beng, retr, RCFG, enc, async_rounds=True).serve(prompts)
+    assert asyn.verify_wall_s > 0
+    assert asyn.overlap_wall_s > 0, "gate ratio 0 must overlap every round"
+    assert 0.0 <= asyn.measured_overlap_s
+    assert asyn.measured_overlap_s \
+        <= min(asyn.verify_wall_s, asyn.overlap_wall_s) + 1e-9
+
+
+@pytest.mark.perf
+def test_overlap_ledger_measures_real_concurrency(stack):
+    """Wall-clock-sensitive (deselected from the CI fast tier): with the gate
+    forced open and long overlap strides, the worker's KB call and the main
+    thread's stride must DEMONSTRABLY run concurrently — a positive monotonic
+    span intersection. numpy BLAS and jit'd XLA release the GIL, so this
+    holds even on one core; the loose threshold (> 0, not a fraction) keeps
+    it scheduler-tolerant."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng, beng2 = stack
+    retr = ExactDenseRetriever(dkb)
+    fr = FleetServer(beng, retr, RCFG, enc, async_rounds=True).serve(prompts)
+    assert fr.overlap_wall_s > 0
+    assert fr.measured_overlap_s > 0, \
+        "no measured concurrency between KB call and overlapped stride"
+
+
+# ---------------------------------------------------------------------------------
+# (f) single-request path on the generalized multi-step carry
 # ---------------------------------------------------------------------------------
 def test_single_request_carry_budget_boundary(stack):
     """Budget 17 ends mid-stride with a pending carry — the generalized

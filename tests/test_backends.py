@@ -304,6 +304,33 @@ def test_adr_jitted_backend_warmup_keys_on_candidate_width():
     assert rn.stats.warmup_calls == 0 and rn.stats.model_latency(1) > 0.0
 
 
+def test_candidate_scratch_accounting_fused_vs_pregathered():
+    """The fused in-kernel gather's peak candidate buffer is one
+    (B, block_c, ...) tile — independent of C — for the kernel/sharded
+    families: at the acceptance point (C=4096, d=64) the pre-gathered
+    (B, C, ...) slab is >= 10x larger, fp32 and int8 alike. The flat hosts
+    chunk their gather, so they too never exceed the pre-gathered slab."""
+    rng = np.random.default_rng(31)
+    emb = _grid(rng, 256, 64)
+    B, C = 8, 4096
+    for name in ("kernel", "sharded", "int8-kernel", "int8-sharded"):
+        b = make_backend(name, emb, n_shards=2)
+        got = b.gathered_scratch_bytes(B, C)
+        pre = b.pregathered_scratch_bytes(B, C)
+        assert got > 0 and pre > 0, name
+        assert got * 10 <= pre, f"{name}: only {pre / got:.1f}x < 10x"
+    b = make_backend("numpy", emb)
+    assert b.gathered_scratch_bytes(B, C) <= b.pregathered_scratch_bytes(B, C)
+    # the int8 HOST path casts row chunks to fp32, so its honest peak can
+    # exceed the naive int8 (B, C, d+4) slab — but never the full fp32 cast
+    b = make_backend("int8", emb)
+    assert 0 < b.gathered_scratch_bytes(B, C) <= B * C * emb.shape[1] * 4
+    # a custom tile width moves the fused families' accounting
+    wide = make_backend("kernel", emb, block_c=1024)
+    assert wide.gathered_scratch_bytes(B, C) \
+        > make_backend("kernel", emb).gathered_scratch_bytes(B, C)
+
+
 # ---------------------------------------------------------------------------------
 # stats calibration hygiene (warmup exclusion)
 # ---------------------------------------------------------------------------------
@@ -494,17 +521,60 @@ def test_adr_sharded_continuous_serve_parity(four_devices, serve_stack):
     assert retr.backend.calls == retr.stats.calls
 
 
-def test_adr_kernel_fleet_serve_parity(serve_stack):
-    """The Pallas (interpret-mode) gathered scan serves the same tokens too —
-    the kernel cell of the ADR x backend matrix. (kernel-only: runs on the
-    single-device CI matrix leg too.)"""
+@pytest.mark.parametrize("async_rounds", [False, True])
+def test_adr_kernel_fleet_serve_parity(serve_stack, async_rounds):
+    """The fused in-kernel gather (interpret-mode Pallas / streaming oracle)
+    serves the same tokens too — the kernel cell of the ADR x backend matrix,
+    sync and async/pipelined, one backend call per merged probe round (plus
+    the seed call). (kernel-only: runs on the single-device CI matrix leg
+    too.)"""
     from repro.serving.fleet import FleetServer
     docs, enc, dkb, prompts, seng, beng = serve_stack
     want = _adr_seq_tokens(serve_stack)
     retr = _adr_retr(dkb, backend="kernel")
-    with FleetServer(beng, retr, _rcfg(), enc, async_rounds=False) as fleet:
+    with FleetServer(beng, retr, _rcfg(), enc,
+                     async_rounds=async_rounds) as fleet:
         fr = fleet.serve(prompts)
     assert [r.tokens for r in fr.results] == want
+    assert retr.backend.calls == fr.kb_calls == fr.rounds + 1
+
+
+def test_adr_kernel_continuous_serve_parity(serve_stack):
+    """Continuous batching over the fused kernel ADR probe: byte-identical
+    outputs under churn, one backend call per KB call. (kernel-only: runs on
+    the single-device CI matrix leg too.)"""
+    from repro.serving.continuous import ContinuousFleetServer, as_requests
+    from repro.serving.batched import BatchedServeEngine
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = _adr_seq_tokens(serve_stack)
+    retr = _adr_retr(dkb, backend="kernel")
+    eng2 = BatchedServeEngine(beng.model, beng.params, 2, cache_window=256)
+    server = ContinuousFleetServer(eng2, retr, _rcfg(), enc)
+    cr = server.serve(as_requests(prompts, [0.0, 0.0, 1.0]))
+    assert [r.tokens for r in cr.results] == want, \
+        "kernel-backend ADR continuous fleet diverged from RaLMSeq"
+    assert retr.backend.calls == retr.stats.calls
+
+
+@pytest.mark.parametrize("async_rounds", [False, True])
+def test_int8_kernel_adr_fleet_self_consistency(serve_stack, async_rounds):
+    """The int8 fused gather's preservation surface: fleet-served ADR through
+    the int8-kernel backend == per-request RaLMSeq on the SAME backend (codes
+    AND per-row scales DMA in-kernel; determinism is the contract), with one
+    backend call per merged probe round plus the seed call."""
+    from repro.core.ralmspec import RaLMSeq
+    from repro.serving.fleet import FleetServer
+    docs, enc, dkb, prompts, seng, beng = serve_stack
+    want = [RaLMSeq(seng, _adr_retr(dkb, backend="int8-kernel"), _rcfg(),
+                    enc).serve(p).tokens for p in prompts]
+    retr = _adr_retr(dkb, backend="int8-kernel")
+    assert retr.backend.exact is False
+    with FleetServer(beng, retr, _rcfg(), enc,
+                     async_rounds=async_rounds) as fleet:
+        fr = fleet.serve(prompts)
+    assert [r.tokens for r in fr.results] == want, \
+        "int8-kernel ADR fleet diverged from RaLMSeq on the same backend"
+    assert retr.backend.calls == fr.kb_calls == fr.rounds + 1
 
 
 @pytest.mark.parametrize("async_rounds", [False, True])

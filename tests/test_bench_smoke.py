@@ -48,11 +48,12 @@ BENCHES = {
     "bench_async_fleet.py": dict(
         args=["--retriever", "edr", "--concurrency", "2", "--requests", "2",
               "--max-new", "8", "--n-docs", "2000", "--enc-dim", "64",
-              "--d-model", "64"], kind="async_fleet"),
+              "--d-model", "64", "--wall-repeats", "1", "--shared-cache",
+              "--kb-latency", "0.002"], kind="async_fleet"),
     "bench_backends.py": dict(
         args=["--kb-sizes", "256", "--batches", "1,2", "--k", "4",
               "--dim", "16", "--repeats", "1", "--mesh-shards", "2",
-              "--retriever", "both"], kind="backends"),
+              "--retriever", "both", "--block-c", "128"], kind="backends"),
     "bench_shared_cache.py": dict(
         args=["--tiny", "--retriever", "edr"], kind="shared_cache"),
     "bench_faults.py": dict(
@@ -103,14 +104,30 @@ def _check_continuous(payload):
 def _check_async_fleet(payload):
     results = payload["results"]
     assert results, "no results emitted"
+    # the run's knobs are part of the committed record: a reader must be able
+    # to tell whether the numbers include injected KB latency or the shared
+    # cross-request cache tier
+    cfg = payload["config"]
+    assert "kb_latency_s" in cfg and _finite(cfg["kb_latency_s"]), cfg
+    assert isinstance(cfg.get("shared_cache"), bool), cfg
     for levels in results.values():
         assert levels
         for cell in levels.values():
             assert set(cell) >= {"sync_modeled_s", "async_modeled_s",
-                                 "modeled_speedup", "rounds", "kb_calls"}, cell
-            for key in ("sync_modeled_s", "async_modeled_s",
-                        "modeled_speedup"):
+                                 "modeled_speedup", "rounds", "kb_calls",
+                                 "sync_wall_s", "async_wall_s", "wall_speedup",
+                                 "verify_wall_s", "overlap_wall_s",
+                                 "measured_overlap_s",
+                                 "overlap_fraction"}, cell
+            for key in ("sync_modeled_s", "async_modeled_s", "modeled_speedup",
+                        "sync_wall_s", "async_wall_s", "wall_speedup",
+                        "verify_wall_s", "overlap_wall_s",
+                        "measured_overlap_s", "overlap_fraction"):
                 assert _finite(cell[key]) and cell[key] >= 0, (key, cell)
+            # the measured-overlap ledger's internal consistency: the span
+            # intersection can't exceed either side
+            assert cell["measured_overlap_s"] <= min(
+                cell["verify_wall_s"], cell["overlap_wall_s"]) + 1e-9, cell
 
 
 def _check_backends(payload):
@@ -128,6 +145,26 @@ def _check_backends(payload):
         # int8 family is held to the tested recall contract instead
         assert r["recall_at_k"] >= (0.99 if r["exact"] else 0.95), r
         assert isinstance(r["kb_bytes"], int) and r["kb_bytes"] > 0, r
+        if r["retriever"] == "adr":
+            # every ADR cell reports its candidate width and peak
+            # candidate-buffer bytes, actual (fused/tiled) vs pre-gathered
+            assert set(r) >= {"cand_width", "cand_buf_bytes",
+                              "cand_buf_bytes_pregathered"}, r
+            assert r["cand_width"] > 0, r
+            assert r["cand_buf_bytes"] > 0, r
+            assert r["cand_buf_bytes_pregathered"] > 0, r
+            # the fused kernel/sharded families tile the gather: scratch is
+            # at most ONE lane-aligned tile of per-candidate bytes
+            # (fused_block_c: <= max(roundup(C, 128), 128) candidates wide —
+            # at tiny C the 128-lane floor can exceed the tiny (B, C, ...)
+            # slab, so the slab itself is only an upper bound at real widths;
+            # the committed-file gate below demands >= 10x UNDER the slab at
+            # C >= 4096)
+            if r["backend"] in ("kernel", "sharded", "int8-kernel",
+                                "int8-sharded"):
+                lane_w = max(-(-r["cand_width"] // 128) * 128, 128)
+                per_cand = r["cand_buf_bytes_pregathered"] // r["cand_width"]
+                assert r["cand_buf_bytes"] <= per_cand * lane_w, r
     # the --retriever both sweep must cover the full backend x retriever grid
     cells = {(r["backend"], r["retriever"]) for r in rows}
     assert cells == {(b, a)
@@ -206,6 +243,26 @@ def test_committed_bench_json_files_are_schema_valid():
         kind = payload.get("bench")
         assert kind in CHECKS, (path, kind)
         CHECKS[kind](payload)
+        if kind == "backends":
+            # fused-gather acceptance on the COMMITTED sweep: at least one
+            # kernel-family ADR cell probes C >= 4096 candidates, and there
+            # the fused in-kernel gather holds >= 10x less candidate scratch
+            # than the pre-gathered (B, C, ...) slab
+            big = [r for r in payload["rows"]
+                   if r["retriever"] == "adr" and r.get("cand_width", 0) >= 4096
+                   and r["backend"] in ("kernel", "sharded", "int8-kernel",
+                                        "int8-sharded")]
+            assert big, f"{path}: no kernel-family ADR cell with C >= 4096"
+            for r in big:
+                assert r["cand_buf_bytes"] * 10 \
+                    <= r["cand_buf_bytes_pregathered"], \
+                    (path, r["backend"], r["cand_width"])
+        if kind == "async_fleet":
+            # wall-clock acceptance on the COMMITTED run: EDR at c=4 shows a
+            # MEASURED (median wall) speedup > 1.0 and real measured overlap
+            cell = payload["results"]["edr"]["4"]
+            assert cell["wall_speedup"] > 1.0, cell["wall_speedup"]
+            assert cell["measured_overlap_s"] > 0, cell
 
 
 def test_every_bench_script_has_a_smoke_entry():

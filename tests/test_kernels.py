@@ -8,6 +8,9 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.dense_topk import (dense_topk_pallas,
+                                      fused_gathered_topk_pallas,
+                                      gathered_topk_pallas,
+                                      quant_fused_gathered_topk_pallas,
                                       quant_gathered_topk_pallas,
                                       quant_topk_pallas)
 from repro.retrieval.backends import quantize_kb
@@ -105,6 +108,118 @@ def test_quant_gathered_topk_matches_ref(B, N, C, d, k, block_c):
     n_real = int((cand[0] >= 0).sum())
     if k > n_real:
         assert np.all(np.asarray(i_k)[0, n_real:] == -1)
+
+
+# --------------------------------------------------------------------------------------
+# fused in-kernel candidate gather (fp32 + int8): the tiled DMA path
+# --------------------------------------------------------------------------------------
+def _ragged_cand(g, B, C, N, dup_row=None, empty_row=None):
+    """Id-sorted candidate rows with -1 tail padding; optionally one row with
+    a duplicated real id and one all-pad row."""
+    cand = np.full((B, C), -1, np.int64)
+    for b in range(B):
+        if b == empty_row:
+            continue
+        w = int(g.integers(1, min(C, N)))
+        row = np.sort(g.choice(N, size=w, replace=False))
+        if b == dup_row and w >= 2:
+            row[1] = row[0]
+        cand[b, :w] = row
+    return cand
+
+
+@pytest.mark.parametrize("B,N,C,d,k,block_c", [
+    (2, 500, 130, 32, 5, 128),      # C not a multiple of 128; ragged tail tile
+    (3, 300, 384, 16, 8, 128),      # ids cross gather-tile boundaries, 3 tiles
+    (1, 128, 16, 8, 16, 256),       # k > real candidates -> pad sentinels
+])
+def test_fused_gathered_topk_matches_ref(B, N, C, d, k, block_c):
+    """In-kernel DMA gather (interpret) vs the streaming jnp oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(N + C), 2)
+    q = jax.random.normal(ks[0], (B, d), jnp.float32)
+    kb = jax.random.normal(ks[1], (N, d), jnp.float32)
+    cand = jnp.asarray(_ragged_cand(np.random.default_rng(C), B, C, N),
+                       jnp.int32)
+    s_k, i_k = fused_gathered_topk_pallas(q, kb, cand, k, block_c=block_c,
+                                          interpret=True)
+    s_r, i_r = ref.fused_gathered_topk_ref(q, kb, cand, k, block_c=block_c)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+
+
+def test_fused_gathered_duplicates_and_allpad_rows():
+    """Duplicate candidate ids tie-break to the earlier column (both paths);
+    an all-pad row comes back entirely sentinel (NEG, -1)."""
+    B, N, C, d, k = 3, 200, 140, 16, 6
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    q = jax.random.normal(ks[0], (B, d), jnp.float32)
+    kb = jax.random.normal(ks[1], (N, d), jnp.float32)
+    cand = jnp.asarray(
+        _ragged_cand(np.random.default_rng(9), B, C, N, dup_row=0,
+                     empty_row=2), jnp.int32)
+    s_k, i_k = fused_gathered_topk_pallas(q, kb, cand, k, block_c=128,
+                                          interpret=True)
+    s_r, i_r = ref.fused_gathered_topk_ref(q, kb, cand, k, block_c=128)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
+    assert np.all(np.asarray(i_k)[2] == -1)           # all-pad row: sentinels
+    assert np.all(np.asarray(s_k)[2] < -1e37)
+
+
+def test_fused_gather_byte_parity_with_pregathered():
+    """Fused in-kernel gather == pre-gathered (B, C, d) kernel, bit for bit,
+    fp32 and int8 — the serve-path byte-parity invariant at kernel level."""
+    B, N, C, d, k = 2, 300, 260, 16, 8
+    g = np.random.default_rng(3)
+    kb = (g.integers(-2, 3, size=(N, d)) / 2).astype(np.float32)
+    q = jnp.asarray((g.integers(-2, 3, size=(B, d)) / 2).astype(np.float32))
+    cand = _ragged_cand(g, B, C, N, empty_row=1)
+    cand_j = jnp.asarray(cand, jnp.int32)
+    safe = np.maximum(cand, 0)
+
+    s_f, i_f = fused_gathered_topk_pallas(q, jnp.asarray(kb), cand_j, k,
+                                          block_c=128, interpret=True)
+    s_p, i_p = gathered_topk_pallas(q, jnp.asarray(kb[safe]), cand_j, k,
+                                    interpret=True)
+    assert np.array_equal(np.asarray(s_f), np.asarray(s_p))
+    assert np.array_equal(np.asarray(i_f), np.asarray(i_p))
+
+    codes, scales = quantize_kb(kb)
+    s_qf, i_qf = quant_fused_gathered_topk_pallas(
+        q, jnp.asarray(codes), jnp.asarray(scales), cand_j, k, block_c=128,
+        interpret=True)
+    s_qp, i_qp = quant_gathered_topk_pallas(
+        q, jnp.asarray(codes[safe]), jnp.asarray(scales[safe]), cand_j, k,
+        interpret=True)
+    assert np.array_equal(np.asarray(s_qf), np.asarray(s_qp))
+    assert np.array_equal(np.asarray(i_qf), np.asarray(i_qp))
+
+
+@pytest.mark.parametrize("B,N,C,d,k,block_c", [
+    (2, 500, 130, 32, 5, 128),      # C not a multiple of 128
+    (1, 128, 16, 8, 16, 256),       # k > real candidates -> pad sentinels
+    (3, 300, 270, 16, 6, 128),      # duplicate ids + tile-crossing rows
+])
+def test_quant_fused_gathered_topk_matches_ref(B, N, C, d, k, block_c):
+    """int8 fused gather: codes AND per-row scales DMA in-kernel (interpret)
+    vs the streaming oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(N + C + 1), 2)
+    q = jax.random.normal(ks[0], (B, d), jnp.float32)
+    codes, scales = quantize_kb(np.asarray(
+        jax.random.normal(ks[1], (N, d), jnp.float32)))
+    cand = jnp.asarray(
+        _ragged_cand(np.random.default_rng(C + 1), B, C, N,
+                     dup_row=0 if B > 2 else None), jnp.int32)
+    s_k, i_k = quant_fused_gathered_topk_pallas(
+        q, jnp.asarray(codes), jnp.asarray(scales), cand, k,
+        block_c=block_c, interpret=True)
+    s_r, i_r = ref.quant_fused_gathered_topk_ref(
+        q, jnp.asarray(codes), jnp.asarray(scales), cand, k, block_c=block_c)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4,
+                               rtol=1e-4)
+    assert np.array_equal(np.asarray(i_k), np.asarray(i_r))
 
 
 def test_quant_topk_block_boundary_ids():
