@@ -59,10 +59,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import RaLMConfig  # noqa: E402
 from repro.core.cache import SharedRetrievalCache  # noqa: E402
-from repro.launch.serve import build_stack  # noqa: E402
+from repro.launch.serve import build_stack, make_server  # noqa: E402
 from repro.retrieval.faults import FaultSpec, inject_faults  # noqa: E402
-from repro.serving.batched import BatchedServeEngine  # noqa: E402
-from repro.serving.fleet import FleetServer  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
 from common import add_json_arg, measure_wall, warm_engine, write_json  # noqa: E402
@@ -103,9 +101,15 @@ def bench_one(retr_name, levels, args):
     # cost is comparable to the LM stride — ADR's point here is the gate
     # closing, not a giant KB
     n_docs = args.n_docs or AUTO_N_DOCS[retr_name]
-    cfg, model, params, docs, enc, retr = build_stack(
+    stack = build_stack(
         retr_name, n_docs=n_docs, enc_dim=args.enc_dim,
-        d_model=args.d_model)
+        d_model=args.d_model,
+        rcfg=RaLMConfig(max_new_tokens=args.max_new,
+                        speculation_stride=args.stride,
+                        prefetch_top_k=20 if "p" in args.variant else 1,
+                        use_os3="s" in args.variant,
+                        async_gate_ratio=args.gate_ratio))
+    docs, retr, rcfg = stack.docs, stack.retriever, stack.rcfg
     if args.kb_latency > 0 and hasattr(retr, "backend"):
         # constant KB service latency (deterministic spike-on-every-call via
         # the PR-8 fault harness; latency-only, so outputs stay
@@ -125,11 +129,6 @@ def bench_one(retr_name, levels, args):
         print(f"[{retr_name}] --kb-latency skipped (sparse KB scores "
               "per-query; a per-scan sleep would not model one service RTT "
               "per merged call)")
-    rcfg = RaLMConfig(max_new_tokens=args.max_new,
-                      speculation_stride=args.stride,
-                      prefetch_top_k=20 if "p" in args.variant else 1,
-                      use_os3="s" in args.variant,
-                      async_gate_ratio=args.gate_ratio)
     prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
     print(f"\n== {retr_name.upper()}  ({n_docs} docs, enc_dim="
           f"{args.enc_dim}, {args.requests} requests, max_new={args.max_new},"
@@ -139,8 +138,7 @@ def bench_one(retr_name, levels, args):
           f"{'overlap':>9} {'carried':>8} {'invalid':>8}")
     rows = {}
     for c in levels:
-        eng = BatchedServeEngine(model, params, c, cache_window=512)
-        warm_engine(eng, rcfg)
+        stack.engine = None             # fresh c-slot engine for this width
         # with --shared-cache each mode gets its OWN fresh tier, warmed by
         # its own warmup serve — the PR-6 cross-request speculation source,
         # symmetric across modes (speculation-only, outputs still verified)
@@ -149,13 +147,17 @@ def bench_one(retr_name, levels, args):
             else (lambda: None))
         # median-of-repeats on the monotonic clock; the warmup serve inside
         # the sync block amortizes jit + stats calibration for both modes
-        with FleetServer(eng, retr, rcfg, enc, async_rounds=False,
-                         shared_cache=mk_shared()) as sync:
+        # (the two modes share one engine: make_server caches it on the stack)
+        stack.shared_cache = mk_shared()
+        with make_server(stack, scheduler="fixed", n_slots=c,
+                         async_fleet=False) as sync:
+            warm_engine(sync.engine, rcfg)
             sync.serve(prompts[:c])        # warmup: jit + stats calibration
             s_wall, _, s = measure_wall(lambda: serve_all(sync, prompts, c),
                                         repeats=args.wall_repeats, warmup=0)
-        with FleetServer(eng, retr, rcfg, enc, async_rounds=True,
-                         shared_cache=mk_shared()) as a_fleet:
+        stack.shared_cache = mk_shared()
+        with make_server(stack, scheduler="fixed", n_slots=c,
+                         async_fleet=True) as a_fleet:
             # async gets the same warmup the sync block got: its fat carried
             # rounds hit jit shapes (wider verify batches, overlap strides)
             # the sync pass never compiles, and the gate's EMAs need a

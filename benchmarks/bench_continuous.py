@@ -31,11 +31,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import RaLMConfig  # noqa: E402
-from repro.launch.serve import build_stack, make_arrivals  # noqa: E402
-from repro.serving.batched import BatchedServeEngine  # noqa: E402
-from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
-                                      as_requests, percentile)
-from repro.serving.fleet import FleetServer  # noqa: E402
+from repro.launch.serve import build_stack, make_arrivals, make_server  # noqa: E402
+from repro.serving.continuous import as_requests, percentile  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
 from common import add_json_arg, warm_engine, write_json  # noqa: E402
@@ -73,12 +70,12 @@ def serve_fixed(fleet, prompts, arrivals, budgets, slots: int):
 
 def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
               n_docs: int, stride: int, seed: int):
-    cfg, model, params, docs, enc, retr = build_stack(retr_name, n_docs=n_docs)
-    rcfg = RaLMConfig(max_new_tokens=max_new, speculation_stride=stride)
-    prompts = [(q * 12)[:48] for q in make_queries(docs, n_requests)]
+    stack = build_stack(retr_name, n_docs=n_docs,
+                        rcfg=RaLMConfig(max_new_tokens=max_new,
+                                        speculation_stride=stride))
+    rcfg = stack.rcfg
+    prompts = [(q * 12)[:48] for q in make_queries(stack.docs, n_requests)]
     budgets = request_budgets(n_requests, max_new)
-    eng = BatchedServeEngine(model, params, slots, cache_window=512)
-    warm_engine(eng, rcfg)
     print(f"\n== {retr_name.upper()}  ({n_docs} docs, {n_requests} requests, "
           f"{slots} slots, budgets {min(budgets)}..{max(budgets)} tok, "
           f"s={stride}) ==")
@@ -87,8 +84,9 @@ def bench_one(retr_name: str, rates, slots: int, n_requests: int, max_new: int,
     rows = []
     # context managers: the (potential) verification workers are released
     # even if a serve raises mid-sweep
-    with ContinuousFleetServer(eng, retr, rcfg, enc) as cont, \
-            FleetServer(eng, retr, rcfg, enc) as fleet:
+    with make_server(stack, scheduler="continuous", n_slots=slots) as cont, \
+            make_server(stack, scheduler="fixed", n_slots=slots) as fleet:
+        warm_engine(stack.engine, rcfg)          # one engine, shared by both
         cont.serve(as_requests(prompts[:slots]))  # warmup: jit + stats calibration
         for rate in rates:
             arrivals = make_arrivals(n_requests, rate, seed=seed)

@@ -29,28 +29,25 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import RaLMConfig  # noqa: E402
-from repro.launch.serve import build_stack  # noqa: E402
+from repro.launch.serve import build_stack, make_server  # noqa: E402
 from repro.retrieval.faults import FaultSpec, inject_faults  # noqa: E402
-from repro.serving.batched import BatchedServeEngine  # noqa: E402
-from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
-                                      as_requests)
+from repro.serving.continuous import as_requests  # noqa: E402
 
 from common import add_json_arg, warm_engine, write_json  # noqa: E402
 
 
 def bench_one(retr_name: str, rates, args):
-    cfg, model, params, docs, enc, retr = build_stack(retr_name,
-                                                      n_docs=args.n_docs)
-    rcfg = RaLMConfig(max_new_tokens=args.max_new,
-                      speculation_stride=args.stride,
-                      retry_max=args.retry_max,
-                      retrieval_timeout_s=args.retrieval_timeout,
-                      max_queue_depth=args.max_queue_depth,
-                      queue_deadline_s=args.queue_deadline)
+    stack = build_stack(
+        retr_name, n_docs=args.n_docs,
+        rcfg=RaLMConfig(max_new_tokens=args.max_new,
+                        speculation_stride=args.stride,
+                        retry_max=args.retry_max,
+                        retrieval_timeout_s=args.retrieval_timeout,
+                        max_queue_depth=args.max_queue_depth,
+                        queue_deadline_s=args.queue_deadline))
+    retr, rcfg = stack.retriever, stack.rcfg
     from repro.training.data import make_queries
-    prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
-    eng = BatchedServeEngine(model, params, args.slots, cache_window=512)
-    warm_engine(eng, rcfg)
+    prompts = [(q * 12)[:48] for q in make_queries(stack.docs, args.requests)]
     # the dense/sparse KB execution object the injector wraps in place —
     # saved so each rate starts from the clean stack
     attr = "backend" if hasattr(retr, "backend") else "kb"
@@ -63,7 +60,9 @@ def bench_one(retr_name: str, rates, args):
           f"{'retried':>8} {'failed':>7} {'degr':>5} {'shed':>5} {'match':>6}")
 
     rows = []
-    with ContinuousFleetServer(eng, retr, rcfg, enc) as server:
+    with make_server(stack, scheduler="continuous",
+                     n_slots=args.slots) as server:
+        warm_engine(server.engine, rcfg)
         # clean reference run: jit warmup + the byte-parity baseline every
         # rate's non-degraded outputs are compared against
         ref = server.serve(as_requests(prompts))

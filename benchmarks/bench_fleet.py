@@ -28,9 +28,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import RaLMConfig  # noqa: E402
-from repro.launch.serve import build_stack  # noqa: E402
-from repro.serving.batched import BatchedServeEngine  # noqa: E402
-from repro.serving.fleet import FleetServer  # noqa: E402
+from repro.launch.serve import build_stack, make_server  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
 from common import add_json_arg, warm_engine, write_json  # noqa: E402
@@ -38,9 +36,11 @@ from common import add_json_arg, warm_engine, write_json  # noqa: E402
 
 def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
               n_docs: int, stride: int):
-    cfg, model, params, docs, enc, retr = build_stack(retr_name, n_docs=n_docs)
-    rcfg = RaLMConfig(max_new_tokens=max_new, speculation_stride=stride)
-    prompts = [(q * 12)[:48] for q in make_queries(docs, n_requests)]
+    stack = build_stack(retr_name, n_docs=n_docs,
+                        rcfg=RaLMConfig(max_new_tokens=max_new,
+                                        speculation_stride=stride))
+    rcfg = stack.rcfg
+    prompts = [(q * 12)[:48] for q in make_queries(stack.docs, n_requests)]
     print(f"\n== {retr_name.upper()}  ({n_docs} docs, {n_requests} requests, "
           f"max_new={max_new}, s={stride}) ==")
     print(f"{'conc':>4} {'tok/s (modeled)':>16} {'tok/s (wall)':>13} "
@@ -48,11 +48,10 @@ def bench_one(retr_name: str, levels, n_requests: int, max_new: int,
     base = None
     rows = []
     for c in levels:
-        eng = BatchedServeEngine(model, params, c, cache_window=512)
-        warm_engine(eng, rcfg)
         tot_an = tot_w = 0.0
         n_tok = calls = queries = 0
-        with FleetServer(eng, retr, rcfg, enc) as fleet:
+        with make_server(stack, scheduler="fixed", n_slots=c) as fleet:
+            warm_engine(fleet.engine, rcfg)
             fleet.serve(prompts[:c])             # warmup: jit + stats calibration
             for i in range(0, len(prompts), c):
                 fr = fleet.serve(prompts[i:i + c])

@@ -1,6 +1,13 @@
 """Paper Figure 5: KNN-LM serving speed-ups (per-token retrieval; spatial-prefetch
 cache + token-match verification), k in {1, 8, 64}, fixed stride vs OS^3.
 
+``--mode fleet`` serves KNN-LM through the fleet instead: per-request
+KNNLMSeq baseline vs the merged-round serving paths (FleetServer,
+ContinuousFleetServer, async two-stage FleetServer) at each ``--concurrency``
+level, asserting token-match per request and emitting
+``BENCH_knnlm_fleet.json`` — the acceptance artifact for the Workload seam
+(fleet KNN-LM >= 1.5x modeled over per-request KNNLMSeq at EDR c >= 4).
+
 ``--backend`` routes the EDR datastore scan through the retrieval-backend
 layer (numpy / kernel / sharded); ``--mesh-shards N`` forces an N-device host
 platform for the sharded backend (applied before jax loads, like
@@ -29,7 +36,11 @@ from repro.core.knnlm import KNNLMSeq, KNNLMSpec  # noqa: E402
 from repro.models.model import build_model  # noqa: E402
 from repro.retrieval.retrievers import (ExactDenseRetriever,  # noqa: E402
                                         IVFRetriever)
+from repro.serving.batched import BatchedServeEngine  # noqa: E402
+from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
+                                      as_requests)
 from repro.serving.engine import ServeEngine  # noqa: E402
+from repro.serving.fleet import FleetServer  # noqa: E402
 
 
 def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
@@ -70,9 +81,81 @@ def run(n_requests: int = 3, ks=(1, 8, 64), backend: str = "numpy",
     return rows
 
 
+FLEET_MODES = ("fleet", "continuous", "async")
+
+
+def run_fleet(concurrency=(1, 2, 4), backend: str = "numpy",
+              mesh_shards: int = 0, k: int = 8, max_new: int = 48,
+              stride: int = 3) -> dict:
+    """Per-request KNNLMSeq vs the three merged-round serving paths, one cell
+    per (retriever, mode, concurrency): at level c the SAME c prompts are
+    served per-request by KNNLMSeq (modeled time sums — requests back to
+    back) and as one group by the c-slot fleet (shared merged-round
+    timeline). Speculation batches per-token retrieval into one stride-wide
+    call per request per round, and the fleet merges those across slots into
+    ONE KB call per round — the modeled speedup grows with c because the
+    EDR scan cost is per-call, not per-query."""
+    cfg = reduced(get_config("knnlm-247m"), layers=2, d_model=128, vocab=VOCAB)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream, enc, ds = knn_stack()
+    retrievers = [("edr", ExactDenseRetriever(ds, backend=backend,
+                                              mesh_shards=mesh_shards)),
+                  ("adr", IVFRetriever(ds, n_clusters=128, nprobe=4, iters=3))]
+    rcfg = RaLMConfig(knnlm=True, knn_k=k, max_new_tokens=max_new,
+                      speculation_stride=stride)
+    # async two-stage rounds: gate forced open + full-stride overlap so the
+    # pipeline actually engages at bench sizes (same knobs as the async tests)
+    acfg = dataclasses.replace(rcfg, async_verification=True,
+                               async_gate_ratio=0.0, async_min_overlap=stride)
+    results = {rname: {m: {} for m in FLEET_MODES} for rname, _ in retrievers}
+    seq_eng = ServeEngine(model, params, cache_window=256)
+    for c in concurrency:
+        prompts = [stream[i * 97:i * 97 + 48].tolist() for i in range(c)]
+        beng = BatchedServeEngine(model, params, n_slots=c, cache_window=256)
+        beng.warm([48])
+        # throwaway serve: the per-width decode/peek jit compiles land here,
+        # not in the first measured cell's modeled timeline
+        with FleetServer(beng, retrievers[0][1], rcfg, enc) as w:
+            w.serve(prompts)
+        for rname, retr in retrievers:
+            base = run_requests(KNNLMSeq(seq_eng, retr, rcfg, enc), prompts)
+            for mode in FLEET_MODES:
+                cls = (ContinuousFleetServer if mode == "continuous"
+                       else FleetServer)
+                with cls(beng, retr, acfg if mode == "async" else rcfg,
+                         enc) as srv:
+                    fr = (srv.serve(as_requests(prompts))
+                          if mode == "continuous" else srv.serve(prompts))
+                match = [tuple(r.tokens) for r in fr.results] == base["tokens"]
+                assert match, f"{rname}/{mode}/c{c}: token streams diverged"
+                cell = dict(
+                    seq_modeled_s=base["analytic"],
+                    fleet_modeled_s=fr.analytic_time,
+                    modeled_speedup=(base["analytic"]
+                                     / max(fr.analytic_time, 1e-9)),
+                    tokps_modeled=fr.throughput(),
+                    tokps_wall=fr.throughput(modeled=False),
+                    tokens=sum(len(r.tokens) for r in fr.results),
+                    kb_calls=fr.kb_calls, rounds=fr.rounds,
+                    outputs_token_match=match)
+                results[rname][mode][str(c)] = cell
+                print(f"fleet/{rname}/{mode}/c{c}: "
+                      f"seq {cell['seq_modeled_s']:.3f}s -> "
+                      f"{cell['fleet_modeled_s']:.3f}s modeled "
+                      f"({cell['modeled_speedup']:.2f}x), "
+                      f"{cell['kb_calls']} KB calls / {cell['rounds']} rounds, "
+                      f"token-match={match}")
+    return results
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--mode", choices=("fig5", "fleet"), default="fig5",
+                    help="fig5: single-request k-sweep (CSV rows); fleet: "
+                         "seq-vs-fleet/continuous/async concurrency sweep "
+                         "(BENCH_knnlm_fleet.json)")
     from repro.retrieval.backends import BACKENDS
     ap.add_argument("--backend", choices=list(BACKENDS),
                     default="numpy",
@@ -84,11 +167,31 @@ if __name__ == "__main__":
                          "N-device host platform before jax initializes)")
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--ks", default="1,8,64",
-                    help="comma-separated neighbour counts")
+                    help="comma-separated neighbour counts (fig5 mode)")
+    ap.add_argument("--concurrency", default="1,2,4",
+                    help="comma-separated fleet widths (fleet mode; level c "
+                         "serves c requests through c slots)")
+    ap.add_argument("--k", type=int, default=8,
+                    help="neighbour count for the fleet sweep")
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--stride", type=int, default=3)
     add_tiny_arg(ap)
     add_json_arg(ap)
     args = ap.parse_args()
     apply_tiny(args)
+    if args.mode == "fleet":
+        results = run_fleet(
+            concurrency=tuple(int(x) for x in args.concurrency.split(",")),
+            backend=args.backend, mesh_shards=args.mesh_shards, k=args.k,
+            max_new=args.max_new, stride=args.stride)
+        if args.json is not None:
+            write_json("knnlm_fleet", {
+                "config": dict(concurrency=args.concurrency, k=args.k,
+                               max_new=args.max_new, stride=args.stride,
+                               backend=args.backend,
+                               mesh_shards=args.mesh_shards, tiny=args.tiny),
+                "results": results}, args.json)
+        sys.exit(0)
     rows = run(n_requests=args.requests,
                ks=tuple(int(x) for x in args.ks.split(",")),
                backend=args.backend, mesh_shards=args.mesh_shards)

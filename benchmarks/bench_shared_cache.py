@@ -34,10 +34,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import RaLMConfig  # noqa: E402
 from repro.core.cache import SharedRetrievalCache  # noqa: E402
-from repro.launch.serve import build_stack, make_arrivals  # noqa: E402
-from repro.serving.batched import BatchedServeEngine  # noqa: E402
-from repro.serving.continuous import (ContinuousFleetServer,  # noqa: E402
-                                      as_requests)
+from repro.launch.serve import build_stack, make_arrivals, make_server  # noqa: E402
+from repro.serving.continuous import as_requests  # noqa: E402
 from repro.training.data import make_queries  # noqa: E402
 
 from common import add_json_arg, add_tiny_arg, warm_engine, write_json  # noqa: E402
@@ -72,14 +70,12 @@ def serve_mode(server, prompts, arrivals, shared):
 
 
 def bench_one(retr_name: str, rates, args):
-    cfg, model, params, docs, enc, retr = build_stack(retr_name,
-                                                      n_docs=args.n_docs)
-    rcfg = RaLMConfig(max_new_tokens=args.max_new,
-                      speculation_stride=args.stride)
-    prompts, picks = zipf_stream(docs, args.requests, args.distinct,
+    stack = build_stack(retr_name, n_docs=args.n_docs,
+                        rcfg=RaLMConfig(max_new_tokens=args.max_new,
+                                        speculation_stride=args.stride))
+    rcfg = stack.rcfg
+    prompts, picks = zipf_stream(stack.docs, args.requests, args.distinct,
                                  args.zipf, args.seed)
-    eng = BatchedServeEngine(model, params, args.slots, cache_window=512)
-    warm_engine(eng, rcfg)
     print(f"\n== {retr_name.upper()}  ({args.n_docs} docs, {args.requests} "
           f"requests over {args.distinct} distinct prompts, zipf "
           f"{args.zipf:g}, {args.slots} slots, {args.max_new} tok) ==")
@@ -87,14 +83,18 @@ def bench_one(retr_name: str, rates, args):
           f"{'kb rows':>8} {'dedup saved':>12} {'hit rate':>9}")
     rows = []
     # context managers: worker threads released even if a serve raises
-    with ContinuousFleetServer(eng, retr, rcfg, enc) as off_server:
+    stack.shared_cache = None
+    with make_server(stack, scheduler="continuous",
+                     n_slots=args.slots) as off_server:
+        warm_engine(off_server.engine, rcfg)
         off_server.serve(as_requests(prompts[:args.slots]))  # warmup: jit + stats
         for rate in rates:
             arrivals = make_arrivals(args.requests, rate, seed=args.seed)
             off, toks_off = serve_mode(off_server, prompts, arrivals, None)
             shared = SharedRetrievalCache(capacity=args.shared_capacity)
-            with ContinuousFleetServer(eng, retr, rcfg, enc,
-                                       shared_cache=shared) as on_server:
+            stack.shared_cache = shared
+            with make_server(stack, scheduler="continuous",
+                             n_slots=args.slots) as on_server:
                 on, toks_on = serve_mode(on_server, prompts, arrivals, shared)
             assert toks_on == toks_off, \
                 "shared cache changed outputs (preservation violated)"

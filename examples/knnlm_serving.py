@@ -1,5 +1,6 @@
 """KNN-LM speculative serving example (paper §5.3): per-token retrieval with
-spatial-prefetch caching and token-match verification.
+spatial-prefetch caching and token-match verification — single-request and
+through the fleet (same merged-KB round loop as RaLM, different workload).
 
     PYTHONPATH=src python examples/knnlm_serving.py
 """
@@ -8,41 +9,37 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import numpy as np
-
-from repro.configs import RaLMConfig, get_config, reduced
-from repro.core.knnlm import KNNLMSeq, KNNLMSpec
-from repro.models.model import build_model
-from repro.retrieval.encoder import ContextEncoder
-from repro.retrieval.kb import build_knn_datastore
-from repro.retrieval.retrievers import ExactDenseRetriever
-from repro.serving.engine import ServeEngine
-from repro.training.data import synthetic_corpus
+from repro.configs import RaLMConfig
+from repro.launch.serve import build_stack, make_server
 
 
 def main():
-    cfg = reduced(get_config("knnlm-247m"))
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-
-    docs = synthetic_corpus(800, cfg.vocab_size)
-    stream = np.concatenate([np.asarray(d, np.int32) for d in docs])
-    enc = ContextEncoder(cfg.vocab_size, d=64, window=16)
-    ds = build_knn_datastore(stream, enc, context=16, limit=20_000)
-    retriever = ExactDenseRetriever(ds)
-    print(f"datastore: {ds.size} (context -> next-token) entries")
-
     rcfg = RaLMConfig(knnlm=True, knn_k=8, max_new_tokens=32,
                       speculation_stride=4)
-    eng = ServeEngine(model, params, cache_window=256)
-    prompt = stream[:48].tolist()
-    base = KNNLMSeq(eng, retriever, rcfg, enc).serve(prompt)
-    spec = KNNLMSpec(eng, retriever, rcfg, enc).serve(prompt)
-    assert base.tokens == spec.tokens
-    print(f"baseline : {base.kb_calls} retrievals (one per token)")
+    stack = build_stack("edr", workload="knnlm", arch="knnlm-247m",
+                        n_docs=800, d_model=128, rcfg=rcfg, knn_entries=20_000)
+    print(f"datastore: {stack.retriever.kb.size} (context -> next-token) "
+          "entries")
+
+    # prompts are prefixes of the datastore's own token stream — the regime
+    # where neighbour retrieval carries signal
+    prompts = [stack.stream[i * 97:i * 97 + 48].tolist() for i in range(3)]
+    seq = make_server(stack, scheduler="seq")
+    base = [seq.serve(p) for p in prompts]
+    spec = make_server(stack, scheduler="single").serve(prompts[0])
+    assert base[0].tokens == spec.tokens
+    print(f"baseline : {base[0].kb_calls} retrievals (one per token)")
     print(f"ralmspec : {spec.kb_calls} batched retrievals, "
-          f"{spec.mismatches} rollbacks, outputs identical")
+          f"{spec.mismatches} rollbacks, outputs identical (token-match)")
+
+    # the fleet: every slot's verification queries merge into ONE batched KB
+    # call per round; per-slot token streams still match the baseline
+    with make_server(stack, scheduler="fixed", n_slots=3) as fleet:
+        fr = fleet.serve(prompts)
+    assert [r.tokens for r in fr.results] == [b.tokens for b in base]
+    assert fr.kb_calls == fr.rounds + 1      # 1 seed + 1 merged call per round
+    print(f"fleet x3 : {fr.kb_calls} merged KB calls over {fr.rounds} rounds "
+          f"for 3 requests, outputs identical (token-match)")
 
 
 if __name__ == "__main__":

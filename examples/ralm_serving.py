@@ -8,23 +8,18 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-
 from repro.configs import RaLMConfig
-from repro.core.ralmspec import RaLMSeq, RaLMSpec
-from repro.launch.serve import build_stack, variant_config
-from repro.serving.engine import ServeEngine
+from repro.launch.serve import build_stack, make_server, variant_config
 from repro.training.data import make_queries
 
 
 def main():
     rcfg = variant_config("psa", RaLMConfig(max_new_tokens=32))
     for retriever in ("edr", "adr", "sr"):
-        cfg, model, params, docs, enc, retr = build_stack(retriever, n_docs=8000)
-        eng = ServeEngine(model, params, cache_window=512)
-        prompt = (make_queries(docs, 1, seed=4)[0] * 12)[:48]
-        base = RaLMSeq(eng, retr, rcfg, enc).serve(prompt)
-        spec = RaLMSpec(eng, retr, rcfg, enc).serve(prompt)
+        stack = build_stack(retriever, n_docs=8000, rcfg=rcfg)
+        prompt = (make_queries(stack.docs, 1, seed=4)[0] * 12)[:48]
+        base = make_server(stack, scheduler="seq").serve(prompt)
+        spec = make_server(stack, scheduler="single").serve(prompt)
         assert base.tokens == spec.tokens
         print(f"{retriever.upper():3s}: baseline {base.kb_calls:2d} KB calls -> "
               f"ralmspec {spec.kb_calls:2d} calls "

@@ -3,7 +3,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.configs.base import InputShape, ModelConfig, MoEConfig, RaLMConfig, SSMConfig
+from repro.configs.base import (AsyncConfig, FaultConfig, InputShape,
+                                ModelConfig, MoEConfig, QueueConfig,
+                                RaLMConfig, SpeculationConfig, SSMConfig)
 from repro.configs.shapes import LONG_CONTEXT_WINDOW, SHAPES
 
 from repro.configs import (  # noqa: E402
@@ -109,11 +111,15 @@ def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 128,
 
 __all__ = [
     "ASSIGNED_ARCHS",
+    "AsyncConfig",
+    "FaultConfig",
     "InputShape",
     "LONG_CONTEXT_WINDOW",
     "ModelConfig",
     "MoEConfig",
+    "QueueConfig",
     "RaLMConfig",
+    "SpeculationConfig",
     "REGISTRY",
     "SHAPES",
     "SSMConfig",

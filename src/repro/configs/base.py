@@ -162,12 +162,29 @@ class InputShape:
 
 
 @dataclass(frozen=True)
-class RaLMConfig:
-    """Serving-loop configuration for the paper's technique (§3–§4)."""
+class SpeculationConfig:
+    """Algorithm-1 speculation knobs (paper §3): stride schedule, prefetch,
+    the speculation cache, and in-round verification dedup."""
 
     generation_stride: int = 4        # k: tokens generated per retrieval (Ram et al.)
     speculation_stride: int = 3       # s: spec steps per verification (fixed mode)
     use_os3: bool = False             # optimal speculation stride scheduler
+    prefetch_top_k: int = 1           # 1 = top-1 cache update; 20/256 = prefetching
+    # fleet-only: collapse byte-identical queries inside a round's merged
+    # verification call before the collective — one KB row per unique query,
+    # scattered back to slots. Output-invariant (retrieval is a pure function
+    # of the query); FleetResult.merged_rows_saved counts the rows it saved.
+    dedup_verification: bool = True
+    os3_window: int = 5               # w for gamma estimation
+    gamma_max: float = 0.6
+    max_stride: int = 16
+    cache_capacity: int = 4096
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Async (pipelined) verification knobs (paper §4, +A)."""
+
     async_verification: bool = False
     # adaptive overlap gate (single path's extra step AND the async fleet's
     # overlapped stride): only speculate under an in-flight verification when
@@ -182,31 +199,18 @@ class RaLMConfig:
     # on the modeled timeline); tests raise it to force full-stride overlaps
     # deterministically on stacks whose retrieval is too cheap to hide work.
     async_min_overlap: int = 0
-    prefetch_top_k: int = 1           # 1 = top-1 cache update; 20/256 = prefetching
-    # fleet-only: collapse byte-identical queries inside a round's merged
-    # verification call before the collective — one KB row per unique query,
-    # scattered back to slots. Output-invariant (retrieval is a pure function
-    # of the query); FleetResult.merged_rows_saved counts the rows it saved.
-    dedup_verification: bool = True
-    os3_window: int = 5               # w for gamma estimation
-    gamma_max: float = 0.6
-    max_stride: int = 16
-    cache_capacity: int = 4096
-    # KNN-LM mode (§5.3)
-    knnlm: bool = False
-    knn_k: int = 8                    # neighbours interpolated
-    knn_prefetch_next_n: int = 10     # spatial-locality cache update
-    knn_lambda: float = 0.25          # interpolation weight
-    max_new_tokens: int = 128
-    max_prompt_len: int = 512
-    max_doc_len: int = 256
-    # ---- fault tolerance (fleet serving) -------------------------------------
-    # retry with exponential backoff + a per-call deadline around the merged
-    # verification KB call (FleetServer._verify_merged) and the continuous
-    # seed / ride-along path. KB search is a pure function of the query (the
-    # invariant dedup_verification already rests on), so a retried call
-    # returns byte-identical rows — transient-fault recovery is
-    # output-preserving by construction (tests/test_faults.py).
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Fault tolerance on the fleet KB-call paths: retry with exponential
+    backoff + a per-call deadline around the merged verification call
+    (FleetServer._verify_merged) and the continuous seed / ride-along path.
+    KB search is a pure function of the query (the invariant
+    dedup_verification already rests on), so a retried call returns
+    byte-identical rows — transient-fault recovery is output-preserving by
+    construction (tests/test_faults.py)."""
+
     retry_max: int = 2                # retries after the first attempt
     retry_backoff_s: float = 0.0      # base backoff; retry i sleeps base*2^(i-1)
     # per-call deadline, 0 = none: a KB call that overruns it counts as timed
@@ -218,10 +222,108 @@ class RaLMConfig:
     # status='degraded' and EXEMPT from byte-parity (the PR-7 exact-bit
     # pattern); False re-raises RetrievalFailed out of serve() instead
     degrade_on_failure: bool = True
-    # continuous-batching overload shedding: cap on ARRIVED requests allowed
-    # to wait for a slot (0 = unbounded; newest arrivals are turned away
-    # first, like a bounded admission queue), and a queueing-delay deadline
-    # past which a waiting request is retired with status='shed' rather than
-    # served long after its sender gave up (0 = none)
+
+
+@dataclass(frozen=True)
+class QueueConfig:
+    """Continuous-batching overload shedding: cap on ARRIVED requests allowed
+    to wait for a slot (0 = unbounded; newest arrivals are turned away first,
+    like a bounded admission queue), and a queueing-delay deadline past which
+    a waiting request is retired with status='shed' rather than served long
+    after its sender gave up (0 = none)."""
+
     max_queue_depth: int = 0
     queue_deadline_s: float = 0.0
+
+
+# which nested sub-config each legacy flat knob lives in (the flat names are
+# DEPRECATED aliases — see RaLMConfig)
+_RALM_GROUPS = {
+    "speculation": SpeculationConfig,
+    "async_": AsyncConfig,
+    "faults": FaultConfig,
+    "queue": QueueConfig,
+}
+_RALM_GROUP_FIELDS = {
+    g: tuple(f.name for f in dataclasses.fields(cls))
+    for g, cls in _RALM_GROUPS.items()
+}
+
+
+@dataclass(frozen=True, init=False)
+class RaLMConfig:
+    """Serving-loop configuration for the paper's technique (§3–§4).
+
+    Knobs are grouped into nested frozen sub-configs — ``speculation``
+    (Algorithm-1 stride/prefetch/cache), ``async_`` (+A pipelining),
+    ``faults`` (retry/deadline/degradation), ``queue`` (continuous-batching
+    shedding) — plus the top-level generation and KNN-LM fields below.
+
+    Back-compat: every sub-config field is also constructible and readable
+    under its historical FLAT name (``RaLMConfig(speculation_stride=3)``,
+    ``rcfg.async_gate_ratio``, ``dataclasses.replace(rcfg, use_os3=True)``)
+    via ``__init__`` folding and read-only property aliases. The flat names
+    are DEPRECATED: new code should pass/ read the nested groups
+    (``rcfg.speculation.use_os3``)."""
+
+    speculation: SpeculationConfig = SpeculationConfig()
+    async_: AsyncConfig = AsyncConfig()
+    faults: FaultConfig = FaultConfig()
+    queue: QueueConfig = QueueConfig()
+    # KNN-LM mode (§5.3)
+    knnlm: bool = False
+    knn_k: int = 8                    # neighbours interpolated
+    knn_prefetch_next_n: int = 10     # spatial-locality cache update
+    knn_lambda: float = 0.25          # interpolation weight
+    # generation budget / shaping
+    max_new_tokens: int = 128
+    max_prompt_len: int = 512
+    max_doc_len: int = 256
+
+    def __init__(self, speculation: Optional[SpeculationConfig] = None,
+                 async_: Optional[AsyncConfig] = None,
+                 faults: Optional[FaultConfig] = None,
+                 queue: Optional[QueueConfig] = None,
+                 knnlm: bool = False, knn_k: int = 8,
+                 knn_prefetch_next_n: int = 10, knn_lambda: float = 0.25,
+                 max_new_tokens: int = 128, max_prompt_len: int = 512,
+                 max_doc_len: int = 256, **flat):
+        groups = {
+            "speculation": speculation if speculation is not None
+            else SpeculationConfig(),
+            "async_": async_ if async_ is not None else AsyncConfig(),
+            "faults": faults if faults is not None else FaultConfig(),
+            "queue": queue if queue is not None else QueueConfig(),
+        }
+        # fold deprecated flat kwargs into their nested group
+        for gname, fields in _RALM_GROUP_FIELDS.items():
+            kw = {n: flat.pop(n) for n in fields if n in flat}
+            if kw:
+                groups[gname] = dataclasses.replace(groups[gname], **kw)
+        if flat:
+            raise TypeError(
+                f"RaLMConfig got unexpected keyword argument(s): "
+                f"{', '.join(sorted(flat))}")
+        for gname, g in groups.items():
+            object.__setattr__(self, gname, g)
+        object.__setattr__(self, "knnlm", knnlm)
+        object.__setattr__(self, "knn_k", knn_k)
+        object.__setattr__(self, "knn_prefetch_next_n", knn_prefetch_next_n)
+        object.__setattr__(self, "knn_lambda", knn_lambda)
+        object.__setattr__(self, "max_new_tokens", max_new_tokens)
+        object.__setattr__(self, "max_prompt_len", max_prompt_len)
+        object.__setattr__(self, "max_doc_len", max_doc_len)
+
+
+def _flat_alias(group: str, name: str) -> property:
+    def get(self):
+        return getattr(getattr(self, group), name)
+    get.__doc__ = (f"DEPRECATED flat alias for ``{group}.{name}`` "
+                   f"(kept for back-compat; prefer the nested field).")
+    return property(get)
+
+
+for _g, _names in _RALM_GROUP_FIELDS.items():
+    for _n in _names:
+        setattr(RaLMConfig, _n, _flat_alias(_g, _n))
+del _g, _names, _n

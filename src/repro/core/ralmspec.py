@@ -141,15 +141,19 @@ class RequestState:
     os3: Optional[OS3]
     res: ServeResult
     analytic: float = 0.0
-    # multi-step async carry: [(snap, query, spec_id, a_latency), ...] of
-    # UNVERIFIED speculative steps taken while the previous round's
+    # multi-step async carry: [(snap, query, spec_id, a_latency[, aux]), ...]
+    # of UNVERIFIED speculative steps taken while the previous round's
     # verification call was in flight. The single-request path carries at most
-    # one step; the async fleet carries up to a whole overlapped stride.
+    # one step; the async fleet carries up to a whole overlapped stride. The
+    # optional 5th element is the workload's per-step auxiliary record (the
+    # iterative-RaLM workload has none; KNN-LM carries the LM logits its
+    # token-match verification recomputes against).
     carry: List[tuple] = field(default_factory=list)
     snaps: List = field(default_factory=list)
     queries: List = field(default_factory=list)
     specs: List[int] = field(default_factory=list)
     a_times: List[float] = field(default_factory=list)
+    aux: List = field(default_factory=list)
     # continuous-batching identity + timing (repro.serving.continuous): which
     # request this state belongs to, its own token budget, and where it sits on
     # the modeled clock. The lockstep paths leave these at their defaults.
@@ -171,16 +175,19 @@ class RequestState:
         not yet verified) overlap steps — their latencies ride along in
         ``a_times`` but are NOT re-charged to the analytic timeline (they were
         paid under the previous round's ``max(a_overlap, b)``)."""
-        self.snaps, self.queries, self.specs, self.a_times = [], [], [], []
-        for snap, q, did, a in self.carry:
-            self.record_step(snap, q, did, a)
+        self.snaps, self.queries, self.specs = [], [], []
+        self.a_times, self.aux = [], []
+        for step in self.carry:
+            self.record_step(*step)
         self.carry = []
 
-    def record_step(self, snap, query, spec_id: int, a_latency: float) -> None:
+    def record_step(self, snap, query, spec_id: int, a_latency: float,
+                    aux=None) -> None:
         self.snaps.append(snap)
         self.queries.append(query)
         self.specs.append(spec_id)
         self.a_times.append(a_latency)
+        self.aux.append(aux)
 
 
 class _ServerBase:

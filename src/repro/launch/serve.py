@@ -84,61 +84,179 @@ import numpy as np  # noqa: E402
 
 from repro.configs import RaLMConfig, get_config, reduced
 from repro.core.cache import SharedRetrievalCache
+from repro.core.knnlm import KNNLMSeq, KNNLMSpec
 from repro.core.ralmspec import RaLMSeq, RaLMSpec
 from repro.models.model import build_model
 from repro.retrieval.encoder import ContextEncoder
 from repro.retrieval.faults import inject_faults, parse_fault_spec
-from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.kb import DenseKB, SparseKB, build_knn_datastore
 from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
                                         IVFRetriever)
 from repro.serving.batched import BatchedServeEngine
 from repro.serving.continuous import ContinuousFleetServer, as_requests
 from repro.serving.engine import ServeEngine
 from repro.serving.fleet import FleetServer
+from repro.serving.workload import Workload, default_workload
 from repro.training.data import make_queries, synthetic_corpus
 
+WORKLOADS = ("ralm", "knnlm")
+SCHEDULERS = ("seq", "single", "fixed", "continuous")
 
-# which execution backends each retriever supports — the ONE table the CLI
-# validation, the drivers, and the docs all mean. EDR delegates its full scan
-# and ADR its IVF bucket scan to `repro.retrieval.backends` (fp32 and int8
-# quantized strategies alike); SR's BM25 term scan has a single (numpy)
-# execution strategy.
-BACKEND_SUPPORT = {
-    "edr": BACKENDS,
-    "adr": BACKENDS,
-    "sr": ("numpy",),
+# The ONE capability table the CLI validation, the drivers, the benchmarks and
+# the docs all mean: (workload, retriever) -> supported execution backends.
+# Every listed cell runs under every scheduler in SCHEDULERS. EDR delegates
+# its full scan and ADR its IVF bucket scan to `repro.retrieval.backends`
+# (fp32 and int8 quantized strategies alike); SR's BM25 term scan has a
+# single (numpy) execution strategy. KNN-LM has no SR cell: its datastore
+# must carry per-entry next-token values, which a BM25 SparseKB does not.
+CAPABILITIES = {
+    ("ralm", "edr"): BACKENDS,
+    ("ralm", "adr"): BACKENDS,
+    ("ralm", "sr"): ("numpy",),
+    ("knnlm", "edr"): BACKENDS,
+    ("knnlm", "adr"): BACKENDS,
 }
+
+# per-retriever view of the table under the default (ralm) workload — kept
+# because docs/tests reference backend support by retriever alone
+BACKEND_SUPPORT = {r: CAPABILITIES[("ralm", r)] for r in ("edr", "adr", "sr")}
+
+
+def validate_stack(workload: str, retriever: str, backend: str = "numpy",
+                   scheduler: str = "fixed") -> None:
+    """THE error path for serving-stack capability: every rejection —
+    unknown workload/scheduler, workload x retriever, retriever x backend —
+    raises ValueError here, naming the valid set. ``build_stack`` calls it
+    before building anything; the CLI maps the message to ``argparse.error``."""
+    if workload not in WORKLOADS:
+        raise ValueError(f"unknown workload {workload!r} "
+                         f"(supported: {', '.join(WORKLOADS)})")
+    if scheduler not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {scheduler!r} "
+                         f"(supported: {', '.join(SCHEDULERS)})")
+    if (workload, retriever) not in CAPABILITIES:
+        sup = [r for (w, r) in CAPABILITIES if w == workload]
+        raise ValueError(
+            f"workload {workload!r} does not support retriever {retriever!r} "
+            f"(supported: {', '.join(sup)})")
+    sup = CAPABILITIES[(workload, retriever)]
+    if backend not in sup:
+        raise ValueError(
+            f"retriever {retriever!r} does not support backend {backend!r} "
+            f"(supported: {', '.join(sup)})")
+
+
+@dataclasses.dataclass
+class ServeStack:
+    """Everything the serving drivers and benchmarks need, by name — the
+    typed return of :func:`build_stack` (replacing the old positional
+    6-tuple) and the one argument :func:`make_server` takes."""
+
+    cfg: object
+    model: object
+    params: object
+    docs: list
+    encoder: ContextEncoder
+    retriever: object
+    rcfg: RaLMConfig
+    workload: Workload
+    retriever_kind: str = "edr"        # capability-table key ("edr"/"adr"/"sr")
+    backend: str = "numpy"             # retrieval execution backend
+    shared_cache: object = None        # optional SharedRetrievalCache tier
+    stream: object = None              # KNN-LM token stream (None for ralm)
+    engine: object = None              # cached by make_server; pass your own
+                                       # to share one across servers
 
 
 def build_stack(retriever: str, *, n_docs: int = 20000, arch: str = "ralm-gpt2-medium",
                 backend: str = "numpy", mesh_shards: int = 0, seed: int = 0,
-                enc_dim: int = 64, d_model: int = 256):
-    """Model + corpus + retriever for the serving drivers and benchmarks.
-    ``backend`` picks the dense retrievers' execution backend
-    (`repro.retrieval.backends.BACKENDS`, fp32 or int8 quantized — EDR's full
-    scan and ADR's IVF bucket scan alike); ``mesh_shards`` caps the sharded
-    backends' shard count (0 = one shard per visible device);
+                enc_dim: int = 64, d_model: int = 256, workload: str = "ralm",
+                rcfg: RaLMConfig = None, shared_cache=None,
+                knn_entries: int = 20000) -> ServeStack:
+    """Model + corpus + retriever + workload for the serving drivers and
+    benchmarks, validated against the capability table and returned as a
+    :class:`ServeStack`. ``backend`` picks the dense retrievers' execution
+    backend (`repro.retrieval.backends.BACKENDS`, fp32 or int8 quantized —
+    EDR's full scan and ADR's IVF bucket scan alike); ``mesh_shards`` caps
+    the sharded backends' shard count (0 = one shard per visible device);
     ``enc_dim``/``d_model`` let benchmarks tune the retrieval-vs-LM cost
-    ratio (bench_async_fleet needs retrieval-heavy EDR)."""
-    if backend not in BACKEND_SUPPORT.get(retriever, ()):
-        raise ValueError(
-            f"retriever {retriever!r} does not support backend {backend!r} "
-            f"(supported: {', '.join(BACKEND_SUPPORT.get(retriever, ()))})")
+    ratio (bench_async_fleet needs retrieval-heavy EDR).
+
+    With ``workload='knnlm'`` the KB is a (context -> next token) datastore
+    over the corpus token stream (``knn_entries`` caps its size; the stream
+    is returned on the stack for prompt construction) and the retriever runs
+    over the datastore embeddings — same EDR/ADR/backends, different rows."""
+    validate_stack(workload, retriever, backend)
+    if rcfg is None:
+        rcfg = RaLMConfig(knnlm=(workload == "knnlm"))
+    else:
+        rcfg = dataclasses.replace(rcfg, knnlm=(workload == "knnlm"))
     cfg = reduced(get_config(arch), layers=2, d_model=d_model)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     docs = synthetic_corpus(n_docs, cfg.vocab_size)
-    enc = ContextEncoder(cfg.vocab_size, d=enc_dim)
+    stream = None
+    if workload == "knnlm":
+        stream = np.concatenate([np.asarray(d, np.int32) for d in docs])
+        enc = ContextEncoder(cfg.vocab_size, d=enc_dim, window=16)
+        kb = build_knn_datastore(stream, enc, context=16, limit=knn_entries)
+    else:
+        enc = ContextEncoder(cfg.vocab_size, d=enc_dim)
+        kb = (SparseKB.build(docs) if retriever == "sr"
+              else DenseKB.build(docs, enc))
     if retriever == "sr":
-        kb = SparseKB.build(docs)
         retr = BM25Retriever(kb)
     else:
-        kb = DenseKB.build(docs, enc)
         retr = (ExactDenseRetriever(kb, backend=backend,
                                     mesh_shards=mesh_shards)
                 if retriever == "edr" else
                 IVFRetriever(kb, backend=backend, mesh_shards=mesh_shards))
-    return cfg, model, params, docs, enc, retr
+    return ServeStack(cfg=cfg, model=model, params=params, docs=docs,
+                      encoder=enc, retriever=retr, rcfg=rcfg,
+                      workload=default_workload(rcfg),
+                      retriever_kind=retriever, backend=backend,
+                      shared_cache=shared_cache, stream=stream)
+
+
+def make_server(stack: ServeStack, *, scheduler: str = "fixed",
+                n_slots: int = 1, cache_window: int = 512,
+                async_fleet=None, engine=None):
+    """THE server factory: every driver/benchmark server comes from here.
+
+    ``scheduler`` picks the serving shape — ``seq`` (the per-request
+    sequential baseline), ``single`` (single-request speculation),
+    ``fixed`` (FleetServer lockstep groups of ``n_slots``), ``continuous``
+    (ContinuousFleetServer admitting mid-flight) — and the stack's workload
+    picks the algorithm (RaLM or KNN-LM) within it. ``async_fleet`` is the
+    fleet servers' ``async_rounds`` (None follows rcfg.async_verification).
+    Engines are cached on ``stack.engine`` and reused when the type and slot
+    count match, so seq/single (or repeated fleet builds at one width) share
+    one set of compiled decode functions; pass ``engine=`` to override."""
+    validate_stack(stack.workload.name, stack.retriever_kind, stack.backend,
+                   scheduler)
+    knn = stack.workload.name == "knnlm"
+    if scheduler in ("seq", "single"):
+        eng = engine if engine is not None else stack.engine
+        if not isinstance(eng, ServeEngine):
+            eng = ServeEngine(stack.model, stack.params,
+                              cache_window=cache_window)
+            stack.engine = eng
+        if scheduler == "seq":
+            cls = KNNLMSeq if knn else RaLMSeq
+            return cls(eng, stack.retriever, stack.rcfg, stack.encoder)
+        if knn:
+            return KNNLMSpec(eng, stack.retriever, stack.rcfg, stack.encoder)
+        return RaLMSpec(eng, stack.retriever, stack.rcfg, stack.encoder,
+                        shared_cache=stack.shared_cache)
+    beng = engine if engine is not None else stack.engine
+    if not (isinstance(beng, BatchedServeEngine) and beng.n_slots == n_slots):
+        beng = BatchedServeEngine(stack.model, stack.params, n_slots,
+                                  cache_window=cache_window)
+        stack.engine = beng
+    cls = ContinuousFleetServer if scheduler == "continuous" else FleetServer
+    return cls(beng, stack.retriever, stack.rcfg, stack.encoder,
+               async_rounds=async_fleet, shared_cache=stack.shared_cache,
+               workload=stack.workload)
 
 
 def variant_config(variant: str, base: RaLMConfig) -> RaLMConfig:
@@ -193,6 +311,10 @@ def make_arrivals(n: int, rate: float, trace: str = "", seed: int = 0):
 
 def main() -> None:
     ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--workload", choices=list(WORKLOADS), default="ralm",
+                    help="ralm: iterative RaLM (Algorithm 1, byte-parity); "
+                         "knnlm: KNN-LM serving (per-token datastore "
+                         "retrieval, token-match parity — paper §5.3)")
     ap.add_argument("--retriever", choices=["edr", "adr", "sr"], default="edr")
     ap.add_argument("--mode", choices=["seq", "spec", "both"], default="both")
     ap.add_argument("--variant", default="psa",
@@ -272,12 +394,13 @@ def main() -> None:
                          "modeled seconds past which a waiting request is "
                          "shed (0 = none)")
     args = ap.parse_args()
-    if args.retriever_backend not in BACKEND_SUPPORT[args.retriever]:
-        # fail loudly rather than silently measuring the wrong scan; the one
-        # table above names what each retriever can execute on
-        ap.error(f"--retriever {args.retriever} does not support "
-                 f"--retriever-backend {args.retriever_backend} (supported: "
-                 f"{', '.join(BACKEND_SUPPORT[args.retriever])})")
+    try:
+        # fail loudly rather than silently measuring the wrong scan: the ONE
+        # capability table (and its one error path) names the valid set
+        validate_stack(args.workload, args.retriever, args.retriever_backend,
+                       args.scheduler)
+    except ValueError as e:
+        ap.error(str(e))
     arrivals = None
     if args.scheduler == "continuous":
         # parse the arrival trace BEFORE building the stack: a malformed
@@ -305,9 +428,21 @@ def main() -> None:
                      "--concurrency > 1 or --scheduler continuous (the "
                      "single-request path has no fault-tolerance shell)")
 
-    cfg, model, params, docs, enc, retr = build_stack(
+    rcfg = variant_config(args.variant.replace("-", ""),
+                          RaLMConfig(max_new_tokens=args.max_new,
+                                     speculation_stride=args.stride,
+                                     retry_max=args.retry_max,
+                                     retry_backoff_s=args.retry_backoff,
+                                     retrieval_timeout_s=args.retrieval_timeout,
+                                     max_queue_depth=args.max_queue_depth,
+                                     queue_deadline_s=args.queue_deadline))
+    shared = (SharedRetrievalCache(capacity=args.shared_cache_capacity)
+              if args.shared_cache else None)
+    stack = build_stack(
         args.retriever, n_docs=args.n_docs, backend=args.retriever_backend,
-        mesh_shards=args.mesh_shards)
+        mesh_shards=args.mesh_shards, workload=args.workload, rcfg=rcfg,
+        shared_cache=shared)
+    docs, retr = stack.docs, stack.retriever
     if args.retriever_backend != "numpy":
         b = retr.backend
         detail = (f"{b.n_shards} shard(s), one collective per KB call"
@@ -319,18 +454,13 @@ def main() -> None:
                        f"{b.kb_bytes / 1e6:.1f} MB int8")
         print(f"{args.retriever.upper()} backend: {b.name} ({detail})")
     inj = inject_faults(retr, fault_spec) if fault_spec is not None else None
-    rcfg = variant_config(args.variant.replace("-", ""),
-                          RaLMConfig(max_new_tokens=args.max_new,
-                                     speculation_stride=args.stride,
-                                     retry_max=args.retry_max,
-                                     retry_backoff_s=args.retry_backoff,
-                                     retrieval_timeout_s=args.retrieval_timeout,
-                                     max_queue_depth=args.max_queue_depth,
-                                     queue_deadline_s=args.queue_deadline))
-    prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
-    eng = ServeEngine(model, params, cache_window=512)
-    shared = (SharedRetrievalCache(capacity=args.shared_cache_capacity)
-              if args.shared_cache else None)
+    if args.workload == "knnlm":
+        # KNN-LM prompts are prefixes of the datastore's own token stream —
+        # the regime where neighbour retrieval carries signal
+        prompts = [stack.stream[i * 97:i * 97 + 48].tolist()
+                   for i in range(args.requests)]
+    else:
+        prompts = [(q * 12)[:48] for q in make_queries(docs, args.requests)]
 
     def run(server, label):
         tot_w = tot_g = tot_r = 0.0
@@ -360,14 +490,13 @@ def main() -> None:
               f"lost, {getattr(res, 'shed', 0)} requests shed")
 
     def run_fleet(label):
-        beng = BatchedServeEngine(model, params, args.concurrency,
-                                  cache_window=512)
         tot_w = tot_an = 0.0
         toks, n_tok = [], 0
         # context manager: the async verification worker is released even if
         # a serve() raises mid-group
-        with FleetServer(beng, retr, rcfg, enc, async_rounds=async_rounds,
-                         shared_cache=shared) as fleet:
+        with make_server(stack, scheduler="fixed",
+                         n_slots=args.concurrency,
+                         async_fleet=async_rounds) as fleet:
             for i in range(0, len(prompts), args.concurrency):
                 fr = fleet.serve(prompts[i:i + args.concurrency])
                 tot_w += fr.wall_time
@@ -380,11 +509,9 @@ def main() -> None:
         return tot_w, toks
 
     def run_continuous(label):
-        beng = BatchedServeEngine(model, params, args.concurrency,
-                                  cache_window=512)
-        with ContinuousFleetServer(beng, retr, rcfg, enc,
-                                   async_rounds=async_rounds,
-                                   shared_cache=shared) as server:
+        with make_server(stack, scheduler="continuous",
+                         n_slots=args.concurrency,
+                         async_fleet=async_rounds) as server:
             cr = server.serve(as_requests(prompts, arrivals))
         print(f"{label:14s} wall {cr.wall_time:7.2f}s  "
               f"modeled makespan {cr.analytic_time:6.2f}s  "
@@ -394,21 +521,26 @@ def main() -> None:
         degradation_line(cr)
         return cr.wall_time, [r.tokens for r in cr.results]
 
+    knn = args.workload == "knnlm"
     results = {}
     if args.mode in ("seq", "both"):
-        results["seq"] = run(RaLMSeq(eng, retr, rcfg, enc), "RaLMSeq")
+        results["seq"] = run(make_server(stack, scheduler="seq"),
+                             "KNNLMSeq" if knn else "RaLMSeq")
     if args.mode in ("spec", "both"):
-        label = "RaLMSpec" + ("+" + args.variant.upper() if args.variant else "")
+        base = "KNNLMSpec" if knn else "RaLMSpec"
+        label = base + ("+" + args.variant.upper() if args.variant else "")
         if args.scheduler == "continuous":
             results["spec"] = run_continuous(f"Continuous x{args.concurrency}")
         elif args.concurrency > 1:
             results["spec"] = run_fleet(f"Fleet x{args.concurrency}")
         else:
-            results["spec"] = run(RaLMSpec(eng, retr, rcfg, enc,
-                                           shared_cache=shared), label)
+            results["spec"] = run(make_server(stack, scheduler="single"),
+                                  label)
     if len(results) == 2:
         same = all(a == b for a, b in zip(results["seq"][1], results["spec"][1]))
-        print(f"outputs identical: {same}   "
+        kind = ("outputs token-match" if stack.workload.equivalence ==
+                "token-match" else "outputs identical")
+        print(f"{kind}: {same}   "
               f"speed-up {results['seq'][0] / max(results['spec'][0], 1e-9):.2f}x")
     if getattr(getattr(retr, "backend", None), "name", "").endswith("sharded"):
         # the merge invariant, visible: every KB call (seed or merged

@@ -227,6 +227,40 @@ class BatchedServeEngine:
         mask[slot_list] = True
         return self._commit_jit(current, committed, jnp.asarray(mask))
 
+    def peek_logits(self, slot: int) -> np.ndarray:
+        """Logits for the slot's *next* token given its current context —
+        the batched form of ServeEngine.peek_logits (KNN-LM interpolation)."""
+        assert self.active[slot], f"peek_logits of idle slot {slot}"
+        return np.asarray(self._last_logits[slot])
+
+    def advance(self, slots: Sequence[int], toks: Sequence[int]) -> None:
+        """Append one externally-chosen token per given slot (KNN-LM: the
+        interpolated argmax) and run ONE batched decode step over exactly
+        those slots — the lockstep form of ServeEngine.advance, and the
+        KNN-LM fleet's whole G-cost per speculation sub-step. Non-participant
+        slots' rows are decoded with a dummy token and discarded by the
+        masked commit, exactly as in ``gen``, so their state is untouched."""
+        slots = [int(b) for b in slots]
+        assert all(self.active[b] for b in slots), \
+            f"advance over idle slot(s): {[b for b in slots if not self.active[b]]}"
+        t0 = time.perf_counter()
+        state, pos, logits = self._bundle()
+        tok_vec = np.zeros((self.n_slots,), np.int32)
+        for b, t in zip(slots, toks):
+            t = int(t)
+            self.tokens[b].append(t)
+            tok_vec[b] = t
+        logits2, state2 = self._decode_jit(self.params, state,
+                                           jnp.asarray(tok_vec), pos)
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slots] = True
+        pos2 = pos + jnp.asarray(mask, jnp.int32)
+        self._set_bundle(self._commit_bundle((state2, pos2, logits2),
+                                             self._bundle(), slots))
+        jax.block_until_ready(self._last_logits)
+        self.stats.decode_time += time.perf_counter() - t0
+        self.stats.decodes += len(slots)
+
     # ---- per-slot views ---------------------------------------------------------------
     def generated(self, slot: int) -> List[int]:
         return self.tokens[slot][self.n_prompt[slot]:]

@@ -169,7 +169,7 @@ class ContinuousFleetServer(FleetServer):
         states = {}                         # slot -> RequestState (live only)
         done = {}                           # rid  -> RequestState (retired)
         self._queue = queue
-        self._preseed = {}                  # rid -> prefetched seed ids row
+        self._preseed = {}                  # rid -> prefetched (ids, scores) rows
         self._extra_rids = []
         self._clock = clock = 0.0
         t0 = time.perf_counter()
@@ -197,7 +197,8 @@ class ContinuousFleetServer(FleetServer):
                 eng.admit(b, list(rq.prompt)[-rcfg.max_prompt_len:])
                 states[b] = st
                 if rq.rid in self._preseed:  # seeded by an earlier round's call
-                    self._cache_insert(st.cache, self._preseed.pop(rq.rid))
+                    self.workload.seed_from_merged(self, st,
+                                                   *self._preseed.pop(rq.rid))
                     st.res.kb_calls += 1
                     st.res.kb_queries += 1
                 else:
@@ -305,7 +306,7 @@ class ContinuousFleetServer(FleetServer):
                 self._extra_rids.append(rq.rid)
         return qs
 
-    def _absorb_extra_verification(self, rows) -> None:
-        for rid, row in zip(self._extra_rids, rows):
-            self._preseed[rid] = row
+    def _absorb_extra_verification(self, ids_rows, sc_rows) -> None:
+        for rid, row, srow in zip(self._extra_rids, ids_rows, sc_rows):
+            self._preseed[rid] = (row, srow)
         self._extra_rids = []

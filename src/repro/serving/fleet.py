@@ -65,8 +65,9 @@ from typing import Dict, List, Optional, Sequence
 from repro.configs.base import RaLMConfig
 from repro.core.cache import SharedRetrievalCache
 from repro.core.ralmspec import (RequestState, ServeResult, _ServerBase,
-                                 dedup_queries, first_mismatch)
+                                 dedup_queries)
 from repro.retrieval.faults import RetrievalFailed
+from repro.serving.workload import Workload, default_workload
 
 
 @dataclass
@@ -142,14 +143,24 @@ class FleetServer(_ServerBase):
     default) follows ``rcfg.async_verification`` — the fleet now honors the
     paper's +A configuration — while True/False force it regardless of the
     variant string. The synchronous path is byte-for-byte the previous
-    behavior."""
+    behavior.
+
+    ``workload`` selects the Algorithm-1 specifics the round loop runs
+    (:mod:`repro.serving.workload`): None picks by ``rcfg.knnlm`` —
+    :class:`~repro.serving.workload.IterativeRaLMWorkload` (byte-parity) or
+    :class:`~repro.serving.workload.KNNLMWorkload` (token-match). Everything
+    workload-shared — merged KB call, dedup ledger, shared cache tier, fault
+    shell, async overlap — lives here."""
 
     def __init__(self, engine, retriever, rcfg: RaLMConfig,
                  encoder=None, chunk_len: int = 64,
                  async_rounds: Optional[bool] = None,
-                 shared_cache: Optional[SharedRetrievalCache] = None):
+                 shared_cache: Optional[SharedRetrievalCache] = None,
+                 workload: Optional[Workload] = None):
         super().__init__(engine, retriever, rcfg, encoder, chunk_len,
                          shared_cache=shared_cache)
+        self.workload = workload if workload is not None else default_workload(rcfg)
+        self.workload.validate(self)
         self.async_rounds = (rcfg.async_verification if async_rounds is None
                              else async_rounds)
         self._pool = (ThreadPoolExecutor(max_workers=1)
@@ -198,7 +209,7 @@ class FleetServer(_ServerBase):
         mid-round are eligible to ride it."""
         return []
 
-    def _absorb_extra_verification(self, rows) -> None:
+    def _absorb_extra_verification(self, ids_rows, sc_rows) -> None:
         pass
 
     def _drain_inflight(self) -> None:
@@ -277,22 +288,23 @@ class FleetServer(_ServerBase):
 
         A seed call that fails after retries is absorbed, not raised: seeding
         only warms speculation (a cold cache speculates -1 and verification
-        corrects), so the slots start cold and stay byte-identical — the
+        corrects), so the slots start cold and stay output-identical — the
         cheapest degradation in the stack (``seed_failures`` on the result)."""
         if not pairs:
             return 0.0
         q0 = [self._query_tokens(self.engine.tokens[b]) for b, _ in pairs]
         uniq, inv = self._dedup(q0)
         try:
-            ids_u, _ = self._verify_merged(uniq,
-                                           max(self.rcfg.prefetch_top_k, 1))
+            ids_u, sc_u = self._verify_merged(uniq,
+                                              self.workload.verify_k(self.rcfg))
         except RetrievalFailed:
             self.seed_failures += 1
             return (self.retriever.stats.model_latency(len(uniq))
                     + self._take_ft_overhead())
         ids0 = ids_u if inv is None else ids_u[inv]
-        for (b, st), row in zip(pairs, ids0):
-            self._cache_insert(st.cache, row)
+        sc0 = sc_u if inv is None else sc_u[inv]
+        for (b, st), row, srow in zip(pairs, ids0, sc0):
+            self.workload.seed_from_merged(self, st, row, srow)
             # per-slot ledger: batched KB calls the slot PARTICIPATED in (so a
             # slot's kb_calls is comparable to single-request RaLMSpec's
             # 1 initial + 1 per round); FleetResult.kb_calls counts the actual
@@ -303,26 +315,12 @@ class FleetServer(_ServerBase):
                 + self._take_ft_overhead())
 
     def _lockstep_substep(self, doers: Sequence[int], states) -> tuple:
-        """One batched speculation sub-step over ``doers``: per-slot snapshot
-        + cache-speculated doc swap, then ONE batched generation stride.
-        Returns ``({slot: (snap, query, spec_id)}, wall_seconds)``. A spec_id
-        of -1 (cold cache) keeps the slot's previous doc; verification will
-        correct — same as the single path."""
-        eng, rcfg = self.engine, self.rcfg
-        t_sub = time.perf_counter()
-        steps = {}
-        for b in doers:
-            snap = eng.snapshot(b)
-            q = self._query_tokens(eng.tokens[b])
-            ids, _ = states[b].cache.retrieve(q, 1)
-            did = int(ids[0])
-            if did >= 0:
-                eng.set_doc(b, self._doc(did))
-            steps[b] = (snap, q, did)
-        eng.gen(doers, [min(rcfg.generation_stride,
-                            self._slot_budget(b, states[b]))
-                        for b in doers])
-        return steps, time.perf_counter() - t_sub
+        """One batched speculation sub-step over ``doers`` — dispatched to the
+        workload (iterative RaLM: doc swap + ONE batched generation stride;
+        KNN-LM: cache-neighbour interpolation + ONE batched single-token
+        advance). Returns ``({slot: (snap, query, spec, aux)},
+        wall_seconds)``."""
+        return self.workload.speculate_step(self, doers, states)
 
     def _overlap_speculate(self, slots: Sequence[int], states,
                            strides: Dict[int, int], a_est: float,
@@ -360,7 +358,10 @@ class FleetServer(_ServerBase):
         the same strategy the paper itself uses for +A's analytic ideal under
         the GIL (§5.1); wall-clock totals report the contended truth, as
         everywhere. Returns
-        ``({slot: [(snap, query, spec_id, a_est), ...]}, modeled_seconds)``."""
+        ``({slot: [(snap, query, spec, a_est, aux), ...]}, modeled_seconds)``
+        — 5-tuples matching ``RequestState.record_step``, so carried steps
+        replay through ``begin_round`` with their workload aux intact (KNN-LM
+        verifies a carried token from its recorded logits a round later)."""
         overlap: Dict[int, List[tuple]] = {b: [] for b in slots}
         n_sub = 0
         while True:
@@ -377,8 +378,8 @@ class FleetServer(_ServerBase):
             steps, _ = self._lockstep_substep(doers, states)
             n_sub += 1
             for b in doers:
-                snap, q, did = steps[b]
-                overlap[b].append((snap, q, did, a_est))
+                snap, q, spec, aux = steps[b]
+                overlap[b].append((snap, q, spec, a_est, aux))
         return {b: ov for b, ov in overlap.items() if ov}, n_sub * a_est
 
     def _run_round(self, live: Sequence[int], states, fleet) -> tuple:
@@ -419,8 +420,8 @@ class FleetServer(_ServerBase):
             # participant's OS^3 sees it as its per-step a
             analytic += a_sub
             for b in doers:
-                snap, q, did = steps[b]
-                states[b].record_step(snap, q, did, a_sub)
+                snap, q, spec, aux = steps[b]
+                states[b].record_step(snap, q, spec, a_sub, aux)
                 if states[b].os3:
                     states[b].os3.record_speculation(a_sub)
 
@@ -434,9 +435,10 @@ class FleetServer(_ServerBase):
         # near-constant-cost (§A.1), so they are almost free. With async
         # rounds they attach to the in-flight call at submission time.
         extra = self._extra_verification_queries(analytic)
-        all_queries = [q for b in participants for q in states[b].queries]
+        all_queries = [q for b in participants
+                       for q in self.workload.build_verification_queries(states[b])]
         all_queries += list(extra)
-        k = max(rcfg.prefetch_top_k, 1)
+        k = self.workload.verify_k(rcfg)
         # in-round dedup: one KB row per UNIQUE query in the merged call;
         # rows scatter back to slots below. The latency model sees the
         # deduplicated width — that's the saving.
@@ -447,7 +449,7 @@ class FleetServer(_ServerBase):
         # (ADR's cheap probes make the overlap pure downside, paper Table 4)
         overlap: Dict[int, List[tuple]] = {}
         overlap_a = 0.0
-        gt_u = None
+        gt_u = sc_u = None
         if self._pool is not None:
             a_all = [a for b in participants for a in states[b].a_times]
             a_est = sum(a_all) / max(len(a_all), 1)
@@ -469,7 +471,7 @@ class FleetServer(_ServerBase):
                     # and close() with the same re-raise
                     fut, self._inflight = self._inflight, None
                 try:
-                    gt_u, _ = fut.result()
+                    gt_u, sc_u = fut.result()
                     # measured concurrency: the worker's KB-call span
                     # (written before the future resolved — the join is the
                     # happens-before edge) intersected with the overlapped
@@ -495,7 +497,7 @@ class FleetServer(_ServerBase):
                     overlap, overlap_a = {}, 0.0
         if gt_u is None:                        # sync round / closed gate / fallback
             try:
-                gt_u, _ = self._verify_merged(uniq, k)
+                gt_u, sc_u = self._verify_merged(uniq, k)
             except RetrievalFailed:
                 if not rcfg.degrade_on_failure:
                     raise
@@ -510,7 +512,7 @@ class FleetServer(_ServerBase):
                 analytic += self._take_ft_overhead()
                 fleet.rounds += 1
                 fleet.degraded_rounds += 1
-                self._absorb_extra_verification([])
+                self._absorb_extra_verification([], [])
                 for b in participants:
                     st = states[b]
                     n = len(st.specs)
@@ -520,6 +522,7 @@ class FleetServer(_ServerBase):
                     st.res.strides.append(n)
                 return analytic, len(participants)
         gt_all = gt_u if inv is None else gt_u[inv]
+        sc_all = sc_u if inv is None else sc_u[inv]
         b_model = r.stats.model_latency(len(uniq))
         # analytic ideal (paper §4, fleet-wide): an overlapped round pays
         # max(a_overlap, b) for the in-flight window; a plain round pays b.
@@ -529,19 +532,20 @@ class FleetServer(_ServerBase):
         analytic += self._take_ft_overhead()
         fleet.rounds += 1
         if extra:
-            self._absorb_extra_verification(gt_all[-len(extra):])
+            self._absorb_extra_verification(gt_all[-len(extra):],
+                                            sc_all[-len(extra):])
 
         # ---- split per slot: cache update, mismatch, carry, bookkeeping -----
         rollbacks = []           # slots needing a correction stride
+        corrections = {}         # slot -> workload correction payload
         off = 0
         for b in participants:
             st = states[b]
             n = len(st.specs)
             gt = gt_all[off:off + n]
+            sc = sc_all[off:off + n]
             off += n
-            for row in gt:
-                self._cache_insert(st.cache, row[:k])
-            m = first_mismatch(st.specs, gt)
+            m, corr = self.workload.check_and_commit(self, st, gt, sc)
             if st.os3:
                 # amortized share: the batched call serves every participant
                 st.os3.record_verification(b_model, n, m,
@@ -554,12 +558,13 @@ class FleetServer(_ServerBase):
             if m < n:
                 st.res.mismatches += 1
                 if overlap.pop(b, None):
-                    # the overlapped stride speculated past a wrong doc: the
+                    # the overlapped stride speculated past a wrong step: the
                     # restore below rewinds it along with steps m..n-1
                     st.res.carry_invalidations += 1
                 eng.restore(b, st.snaps[m])
-                eng.set_doc(b, self._doc(gt[m][0]))
+                self.workload.apply_correction(self, b, st, corr)
                 rollbacks.append(b)
+                corrections[b] = corr
             elif b in overlap:
                 st.carry = overlap.pop(b)
                 st.res.carry_steps += len(st.carry)
@@ -567,12 +572,10 @@ class FleetServer(_ServerBase):
                     for step in st.carry:
                         st.os3.record_speculation(step[3])
 
-        # ---- corrections: one batched generation stride for all rollbacks ---
+        # ---- corrections: ONE batched engine call for all rollbacks ---------
         if rollbacks:
             tc = time.perf_counter()
-            eng.gen(rollbacks, [min(rcfg.generation_stride,
-                                    self._slot_budget(b, states[b]))
-                                for b in rollbacks])
+            self.workload.correction_stride(self, rollbacks, states, corrections)
             analytic += time.perf_counter() - tc
         return analytic, len(participants)
 

@@ -656,3 +656,44 @@ def test_serve_cli_rejection_lists_supported_backends():
     assert "does not support" in out.stderr
     assert "supported: numpy" in out.stderr
     assert "Traceback" not in out.stderr
+
+
+def test_capability_table_workload_dimension():
+    """The capability table's workload axis: KNN-LM has no SR cell (a BM25
+    SparseKB carries no per-entry next-token values), every rejection flows
+    through validate_stack's single error path naming the valid set, and
+    every listed cell validates under every scheduler."""
+    from repro.launch.serve import CAPABILITIES, SCHEDULERS, validate_stack
+    assert ("knnlm", "sr") not in CAPABILITIES
+    with pytest.raises(ValueError, match="does not support retriever") as ei:
+        validate_stack("knnlm", "sr")
+    assert "edr" in str(ei.value) and "adr" in str(ei.value)
+    with pytest.raises(ValueError, match="unknown workload"):
+        validate_stack("bogus", "edr")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        validate_stack("ralm", "edr", scheduler="bogus")
+    for (w, r), backends in CAPABILITIES.items():
+        for b in backends:
+            for s in SCHEDULERS:
+                validate_stack(w, r, b, s)
+
+
+def test_serve_cli_rejects_knnlm_sparse_retriever():
+    """CLI path of the workload axis: `--workload knnlm --retriever sr`
+    exits 2 naming the retrievers KNN-LM does support, before any stack is
+    built."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--workload", "knnlm",
+         "--retriever", "sr"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 2, out.stderr[-1500:]
+    assert "does not support retriever" in out.stderr
+    assert "edr" in out.stderr and "adr" in out.stderr
+    assert "Traceback" not in out.stderr

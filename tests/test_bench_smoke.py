@@ -20,7 +20,9 @@ pytestmark = pytest.mark.bench_smoke
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
-# one entry per benchmark script: tiny-size args + the shape of its payload.
+# one entry per benchmark script: tiny-size args + the shape of its payload
+# (a LIST of specs when one script emits several payload kinds — e.g.
+# bench_knnlm.py's fig5 CSV mode and its fleet mode).
 # kind 'csv' = the shared csv_row schema (rows of name/us_per_call/derived);
 # the rest have bench-specific nested results, validated below.
 BENCHES = {
@@ -36,8 +38,11 @@ BENCHES = {
         args=["--tiny", "--requests", "1", "--retrievers", "sr"], kind="csv"),
     "bench_stride.py": dict(
         args=["--tiny", "--requests", "1", "--retrievers", "edr"], kind="csv"),
-    "bench_knnlm.py": dict(
-        args=["--tiny", "--requests", "1", "--ks", "1"], kind="csv"),
+    "bench_knnlm.py": [
+        dict(args=["--tiny", "--requests", "1", "--ks", "1"], kind="csv"),
+        dict(args=["--tiny", "--mode", "fleet", "--concurrency", "1,2",
+                   "--max-new", "8", "--k", "4"], kind="knnlm_fleet"),
+    ],
     "bench_fleet.py": dict(
         args=["--retriever", "edr", "--concurrency", "1,2", "--requests", "2",
               "--max-new", "8", "--n-docs", "800"], kind="fleet"),
@@ -224,9 +229,33 @@ def _check_faults(payload):
                 assert r["injected"] == 0 and r["degraded"] == 0, r
 
 
+def _check_knnlm_fleet(payload):
+    results = payload["results"]
+    assert results, "no results emitted"
+    cfg = payload["config"]
+    assert {"concurrency", "k", "max_new", "stride"} <= set(cfg), cfg
+    for modes in results.values():
+        assert modes
+        for levels in modes.values():
+            assert levels
+            for cell in levels.values():
+                assert set(cell) >= {"seq_modeled_s", "fleet_modeled_s",
+                                     "modeled_speedup", "tokps_modeled",
+                                     "tokps_wall", "tokens", "kb_calls",
+                                     "rounds"}, cell
+                for key in ("seq_modeled_s", "fleet_modeled_s",
+                            "modeled_speedup", "tokps_modeled", "tokps_wall"):
+                    assert _finite(cell[key]) and cell[key] >= 0, (key, cell)
+                # the Workload seam's preservation claim: every fleet-served
+                # KNN-LM request token-matched its per-request KNNLMSeq run
+                assert cell["outputs_token_match"] is True, cell
+                assert cell["tokens"] > 0 and cell["kb_calls"] > 0, cell
+
+
 CHECKS = dict(csv=_check_csv, fleet=_check_fleet, continuous=_check_continuous,
               async_fleet=_check_async_fleet, backends=_check_backends,
-              shared_cache=_check_shared_cache, faults=_check_faults)
+              shared_cache=_check_shared_cache, faults=_check_faults,
+              knnlm_fleet=_check_knnlm_fleet)
 
 
 def test_committed_bench_json_files_are_schema_valid():
@@ -263,6 +292,16 @@ def test_committed_bench_json_files_are_schema_valid():
             cell = payload["results"]["edr"]["4"]
             assert cell["wall_speedup"] > 1.0, cell["wall_speedup"]
             assert cell["measured_overlap_s"] > 0, cell
+        if kind == "knnlm_fleet":
+            # Workload-seam acceptance on the COMMITTED run: fleet-served
+            # KNN-LM beats per-request KNNLMSeq by >= 1.5x modeled on the
+            # EDR cell at concurrency >= 4
+            big = {int(c): cell
+                   for c, cell in payload["results"]["edr"]["fleet"].items()
+                   if int(c) >= 4}
+            assert big, f"{path}: no EDR fleet cell at concurrency >= 4"
+            for c, cell in big.items():
+                assert cell["modeled_speedup"] >= 1.5, (c, cell)
 
 
 def test_every_bench_script_has_a_smoke_entry():
@@ -272,9 +311,15 @@ def test_every_bench_script_has_a_smoke_entry():
         "new bench_*.py without a smoke entry (or a stale entry here)"
 
 
-@pytest.mark.parametrize("script", sorted(BENCHES))
-def test_bench_runs_and_emits_valid_json(script, tmp_path):
-    spec = BENCHES[script]
+def _specs(script):
+    v = BENCHES[script]
+    return v if isinstance(v, list) else [v]
+
+
+@pytest.mark.parametrize("script,spec", [
+    pytest.param(s, spec, id=f"{s}-{spec['kind']}")
+    for s in sorted(BENCHES) for spec in _specs(s)])
+def test_bench_runs_and_emits_valid_json(script, spec, tmp_path):
     out = tmp_path / "out.json"
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \

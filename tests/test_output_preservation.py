@@ -20,16 +20,19 @@ across tests — the fast tier pays each prefill shape once.
 import dataclasses
 
 import jax
+import numpy as np
 import pytest
 
 from repro.configs import RaLMConfig, get_config, reduced
+from repro.core.knnlm import KNNLMSeq
 from repro.core.ralmspec import RaLMSeq, RaLMSpec
 from repro.models.model import build_model
 from repro.retrieval.encoder import ContextEncoder
-from repro.retrieval.kb import DenseKB, SparseKB
+from repro.retrieval.kb import DenseKB, SparseKB, build_knn_datastore
 from repro.retrieval.retrievers import (BM25Retriever, ExactDenseRetriever,
                                         IVFRetriever)
 from repro.serving.batched import BatchedServeEngine
+from repro.serving.continuous import ContinuousFleetServer, as_requests
 from repro.serving.engine import ServeEngine
 from repro.serving.fleet import FleetServer
 from repro.training.data import make_queries, synthetic_corpus
@@ -181,6 +184,72 @@ def test_fleet_matches_single_request_spec(stack):
     spec = RaLMSpec(seng, retr, RCFG, enc).serve(prompts[0])
     fr = FleetServer(beng, retr, RCFG, enc).serve(prompts[:1])
     assert fr.results[0].tokens == spec.tokens
+
+
+# ---------------------------------------------------------------------------------
+# (b') KNN-LM workload through the same fleet paths: per-token retrieval +
+# token-match verification (KNNLMWorkload behind the Workload seam) must equal
+# per-request KNNLMSeq on every serving path and datastore backend, and the
+# merged-KB-call invariant must survive the workload swap.
+# ---------------------------------------------------------------------------------
+KNN_RCFG = RaLMConfig(knnlm=True, knn_k=8, max_new_tokens=16,
+                      speculation_stride=3)
+
+
+@pytest.fixture(scope="module")
+def knn(stack):
+    """Small KNN-LM datastore over the module corpus's token stream, plus a
+    lazy per-backend KNNLMSeq baseline cache (exact backends are byte-parity,
+    but self-computing per backend keeps the contract honest)."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    vocab = reduced(get_config("ralm-gpt2-medium")).vocab_size
+    stream = np.concatenate([np.asarray(d, np.int32) for d in docs[:300]])
+    kenc = ContextEncoder(vocab, d=32, window=16)
+    ds = build_knn_datastore(stream, kenc, context=16, limit=6000)
+    kprompts = [stream[i * 97:i * 97 + 48].tolist() for i in range(3)]
+    baselines = {}
+
+    def seq_tokens(backend):
+        if backend not in baselines:
+            retr = ExactDenseRetriever(ds, backend=backend)
+            baselines[backend] = [
+                KNNLMSeq(seng, retr, KNN_RCFG, kenc).serve(p).tokens
+                for p in kprompts]
+        return baselines[backend]
+
+    return kenc, ds, kprompts, seq_tokens
+
+
+@pytest.mark.parametrize("backend", ["numpy", "kernel", "sharded"])
+@pytest.mark.parametrize("mode", ["fleet", "continuous", "async"])
+def test_knnlm_serving_preservation(stack, knn, mode, backend):
+    """KNN-LM fleet serving == per-request KNNLMSeq, token for token, on all
+    three serving paths x exact datastore backends — plus the one merged KB
+    call per round invariant (and for sharded, one collective per KB call)."""
+    model, params, docs, enc, dkb, skb, prompts, seng, beng = stack
+    kenc, ds, kprompts, seq_tokens = knn
+    base = seq_tokens(backend)
+    retr = ExactDenseRetriever(ds, backend=backend)
+    rcfg = KNN_RCFG
+    if mode == "async":
+        # forced-open gate + full-stride overlap: the two-stage pipeline
+        # engages deterministically even on this cheap test datastore
+        rcfg = dataclasses.replace(rcfg, async_verification=True,
+                                   async_gate_ratio=0.0, async_min_overlap=4)
+    cls = ContinuousFleetServer if mode == "continuous" else FleetServer
+    with cls(beng, retr, rcfg, kenc) as srv:
+        fr = (srv.serve(as_requests(kprompts)) if mode == "continuous"
+              else srv.serve(kprompts))
+    for i, r in enumerate(fr.results):
+        assert r.tokens == base[i], f"{mode}/{backend}: slot {i} diverged"
+        assert len(r.tokens) == KNN_RCFG.max_new_tokens
+    if mode == "continuous":
+        assert fr.kb_calls == fr.rounds + fr.seed_calls
+    else:
+        assert fr.kb_calls == fr.rounds + 1
+    if backend == "sharded":
+        # one collective per merged KB call, KNN-LM workload included
+        assert retr.backend.calls == retr.stats.calls
 
 
 # ---------------------------------------------------------------------------------
